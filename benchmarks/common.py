@@ -1,0 +1,89 @@
+"""Shared benchmark infrastructure: cached dataset/predictors, table
+printing, improvement math.
+
+Scales: ``ci`` (fast, smoke-level), ``paper`` (default; full 30-matrix suite
+at laptop scale). Artifacts land in ``artifacts/bench/``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (
+    MINIMIZE,
+    OBJECTIVES,
+    AutoSpmvPredictor,
+    PredictorConfig,
+    TuningDataset,
+    collect_dataset,
+)
+from repro.sparse.generate import MATRIX_NAMES
+
+ART = Path(os.environ.get("REPRO_BENCH_DIR", "artifacts/bench"))
+
+SCALES = {
+    # matrix_scale, n_matrices, n_extra, regressor_samples
+    "ci": dict(scale=0.0012, names=MATRIX_NAMES[:10], n_extra=4, reg_samples=800),
+    "paper": dict(scale=0.002, names=MATRIX_NAMES, n_extra=12, reg_samples=2500),
+}
+
+
+def get_dataset(scale_name: str = "paper", *, measure_cpu: bool = False) -> TuningDataset:
+    """Collect (or load cached) the labelled tuning dataset."""
+    ART.mkdir(parents=True, exist_ok=True)
+    tag = "cpu" if measure_cpu else "model"
+    cache = ART / f"dataset_{scale_name}_{tag}.json"
+    if cache.exists():
+        return TuningDataset.load(cache)
+    s = SCALES[scale_name]
+    ds = collect_dataset(
+        scale=s["scale"], names=s["names"], n_extra=s["n_extra"], measure_cpu=measure_cpu
+    )
+    ds.save(cache)
+    return ds
+
+
+_PREDICTORS: dict = {}
+
+
+def get_predictor(scale_name: str = "paper", *, tune: bool = False) -> AutoSpmvPredictor:
+    key = (scale_name, tune)
+    if key not in _PREDICTORS:
+        ds = get_dataset(scale_name)
+        cfg = PredictorConfig(
+            tune=tune,
+            n_trials=8,
+            max_regressor_samples=SCALES[scale_name]["reg_samples"],
+        )
+        _PREDICTORS[key] = AutoSpmvPredictor(cfg).fit(ds)
+    return _PREDICTORS[key]
+
+
+def improvement_pct(default: float, best: float, objective: str) -> float:
+    """Paper-style % improvement of `best` over `default` (positive = better)."""
+    if MINIMIZE[objective]:
+        return 100.0 * (default - best) / default
+    return 100.0 * (best - default) / default
+
+
+def print_table(title: str, headers: list[str], rows: list[list], fmt: str = "10.3g"):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), 12) for h in headers]
+    print("  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    for row in rows:
+        cells = []
+        for c, w in zip(row, widths):
+            if isinstance(c, float):
+                cells.append(f"{c:{fmt}}".ljust(w))
+            else:
+                cells.append(str(c).ljust(w))
+        print("  ".join(cells))
+
+
+def save_result(name: str, payload: dict):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1, default=float))

@@ -1,0 +1,57 @@
+"""Paper Fig. 10: run-time-mode (format selection) gains with compile
+parameters already optimal, per matrix, per objective.
+
+Paper findings reproduced: CSR is already best for latency/energy (gain ~0),
+while average power and energy efficiency gain up to 34.6 % / 99.7 % from
+switching formats."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import get_dataset, improvement_pct, print_table, save_result
+from repro.core import OBJECTIVES
+
+
+def run(scale_name: str = "paper") -> dict:
+    ds = get_dataset(scale_name)
+    suite = [m for m in ds.matrices if not m.startswith("synth")]
+    payload = {"per_matrix": {}}
+    rows = []
+    for m in suite:
+        gains, fmts = {}, {}
+        for obj in OBJECTIVES:
+            csr_best = ds.best_record(m, obj, formats=("csr",))  # compile params optimal
+            any_best = ds.best_record(m, obj)  # + format freedom
+            gains[obj] = improvement_pct(
+                csr_best.objective(obj), any_best.objective(obj), obj
+            )
+            fmts[obj] = any_best.config.fmt
+        payload["per_matrix"][m] = {"gains": gains, "formats": fmts}
+        rows.append([m] + [gains[o] for o in OBJECTIVES] + [fmts["efficiency"]])
+    summary = {
+        obj: {
+            "max": float(max(p["gains"][obj] for p in payload["per_matrix"].values())),
+            "mean": float(np.mean([p["gains"][obj] for p in payload["per_matrix"].values()])),
+        }
+        for obj in OBJECTIVES
+    }
+    payload["summary"] = summary
+    print_table(
+        "Fig.10 — run-time format gain (%) over best-CSR",
+        ["matrix"] + list(OBJECTIVES) + ["eff_fmt"],
+        rows,
+        fmt="8.1f",
+    )
+    print_table(
+        "Fig.10 summary (paper: ~0/~0/34.6/99.7 %)",
+        ["objective", "max %", "mean %"],
+        [[o, summary[o]["max"], summary[o]["mean"]] for o in OBJECTIVES],
+        fmt="8.1f",
+    )
+    save_result("fig10", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper Fig. 11: regression models estimating each objective.
+
+All six regressor families (Table 4) are trained on (features + config
+encoding) -> log(objective) and scored by R^2 / MSE on a held-out 20 %
+split. The paper finds random forest best for energy/efficiency
+(R^2 = 99.11/99.94 %), decision tree best for power (99.99 %), MLP best for
+latency."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALES, get_dataset, print_table, save_result
+from repro.core import OBJECTIVES
+from repro.core.predictor import _config_row
+from repro.ml.metrics import mean_squared_error, r2_score
+from repro.ml.model_zoo import REGRESSOR_ZOO
+
+
+def _design(ds, cap, seed=0):
+    recs = ds.feasible()
+    if len(recs) > cap:
+        idx = np.random.default_rng(seed).choice(len(recs), cap, replace=False)
+        recs = [recs[i] for i in idx]
+    X = np.stack(
+        [np.concatenate([r.features.log_vector(), _config_row(r.config)]) for r in recs]
+    )
+    ys = {o: np.log(np.maximum(np.array([r.objective(o) for r in recs]), 1e-30))
+          for o in OBJECTIVES}
+    return X, ys
+
+
+def run(scale_name: str = "paper", seed: int = 0) -> dict:
+    ds = get_dataset(scale_name)
+    cap = SCALES[scale_name]["reg_samples"]
+    X, ys = _design(ds, cap, seed)
+    n = X.shape[0]
+    order = np.random.default_rng(seed).permutation(n)
+    test, train = order[: n // 5], order[n // 5 :]
+    payload, rows = {}, []
+    for name, entry in REGRESSOR_ZOO.items():
+        kw = dict(entry["defaults"])
+        if name == "random_forest":
+            kw.update(n_estimators=30)  # single-core budget
+        if name == "mlp":
+            kw.update(epochs=150, n_layers=3, hidden_layer_size=64)
+        payload[name] = {}
+        row = [name]
+        for obj in OBJECTIVES:
+            reg = entry["ctor"](**kw)
+            reg.fit(X[train], ys[obj][train])
+            pred = reg.predict(X[test])
+            r2 = 100 * r2_score(ys[obj][test], pred)
+            mse = mean_squared_error(ys[obj][test], pred)
+            payload[name][obj] = {"r2": r2, "mse": mse}
+            row.append(f"{r2:.2f}")
+        rows.append(row)
+    print_table(
+        "Fig.11 — regressor R^2 (%) on held-out 20 % (log-objective)",
+        ["model"] + list(OBJECTIVES),
+        rows,
+    )
+    save_result("fig11", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

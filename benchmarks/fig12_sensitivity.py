@@ -1,0 +1,82 @@
+"""Paper Fig. 12: hardware sensitivity of the learned predictors.
+
+The paper trains on a Turing GPU and validates the predicted configurations
+on a Pascal GPU (<=2 % performance loss). We train the predictor on TPU v5e
+cost-model labels and evaluate the *chosen configurations* under the TPU v4
+cost model: performance loss = how much worse the v5e-chosen config is than
+the true v4 optimum, on v4."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALES, get_dataset, get_predictor, print_table, save_result
+from repro.core import (
+    MINIMIZE,
+    OBJECTIVES,
+    MatrixStats,
+    TpuCostModel,
+    TPU_V4,
+    TuningConfig,
+    full_space,
+)
+from repro.sparse.generate import SUITE, generate_by_name
+
+
+def run(scale_name: str = "paper", n_matrices: int = 6, seed: int = 0) -> dict:
+    ds = get_dataset(scale_name)
+    pred = get_predictor(scale_name)  # trained on v5e labels
+    v4 = TpuCostModel(TPU_V4)
+    scale = SCALES[scale_name]["scale"]
+    # the paper's Fig.12 subset: amazon0601, crankseg_2, bcsstk32, x104, il2010, Chevron3
+    subset = [m for m in ("amazon0601", "crankseg_2", "bcsstk32", "x104", "il2010", "Chevron3")
+              if m in ds.matrices][:n_matrices]
+    if not subset:
+        subset = ds.matrices[:n_matrices]
+    space = list(full_space())
+    payload, rows = {}, []
+    for m in subset:
+        dense = generate_by_name(m, scale=scale) if m in SUITE else None
+        stats = MatrixStats(dense)
+        feats = ds.for_matrix(m)[0].features
+        losses = {}
+        for obj in OBJECTIVES:
+            # v5e-predicted configuration, evaluated on v4
+            sched = pred.predict_schedule(feats, obj)
+            fmt = pred.predict_format(feats, obj)
+            chosen = v4.evaluate(stats, fmt, sched)
+            # true v4 optimum over the space
+            vals = [
+                (v4.evaluate(stats, c.fmt, c.schedule), c) for c in space
+            ]
+            vals = [(v, c) for v, c in vals if v.feasible]
+            best = (
+                min(vals, key=lambda vc: vc[0].get(obj))
+                if MINIMIZE[obj]
+                else max(vals, key=lambda vc: vc[0].get(obj))
+            )[0]
+            if not chosen.feasible:
+                loss = 100.0
+            elif MINIMIZE[obj]:
+                loss = 100 * (chosen.get(obj) - best.get(obj)) / best.get(obj)
+            else:
+                loss = 100 * (best.get(obj) - chosen.get(obj)) / best.get(obj)
+            losses[obj] = loss
+        payload[m] = losses
+        rows.append([m] + [losses[o] for o in OBJECTIVES])
+    mean_loss = {o: float(np.mean([payload[m][o] for m in payload])) for o in OBJECTIVES}
+    payload["mean"] = mean_loss
+    rows.append(["MEAN"] + [mean_loss[o] for o in OBJECTIVES])
+    print_table(
+        "Fig.12 — perf loss (%) of v5e-trained choices evaluated on v4 "
+        "(paper: <=2 % Turing->Pascal)",
+        ["matrix"] + list(OBJECTIVES),
+        rows,
+        fmt="8.1f",
+    )
+    save_result("fig12", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark orchestrator: one module per paper table/figure + the roofline
+report. ``python -m benchmarks.run [--scale ci|paper] [--only fig9,table5]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+BENCHES = [
+    ("fig3", "benchmarks.fig3_default_vs_auto", "Fig.3 default vs Auto-SpMV (consph)"),
+    ("fig4", "benchmarks.fig4_ablation", "Fig.4 per-knob ablation (eu-2005)"),
+    ("fig9", "benchmarks.fig9_compile_time", "Fig.9 compile-time-mode gains"),
+    ("fig10", "benchmarks.fig10_runtime_format", "Fig.10 run-time format gains"),
+    ("table5", "benchmarks.table5_classification", "Table 5 knob classifiers"),
+    ("table6", "benchmarks.table6_comparison", "Table 6 vs prior-work proxies"),
+    ("fig11", "benchmarks.fig11_regression", "Fig.11 objective regressors"),
+    ("table7", "benchmarks.table7_overhead", "Table 7 + Fig.6 overheads"),
+    ("fig12", "benchmarks.fig12_sensitivity", "Fig.12 hardware sensitivity"),
+    ("roofline", "benchmarks.roofline", "Roofline report (dry-run artifacts)"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", choices=["ci", "paper"], default="paper")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    t_all = time.time()
+    for name, module, title in BENCHES:
+        if only and name not in only:
+            continue
+        print(f"\n{'='*72}\n[{name}] {title}\n{'='*72}")
+        t0 = time.time()
+        try:
+            import importlib
+
+            mod = importlib.import_module(module)
+            if name == "roofline":
+                mod.run(args.scale)
+            else:
+                mod.run(args.scale)
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    print(f"\nall benchmarks finished in {time.time()-t_all:.1f}s")
+    if failures:
+        print(f"FAILED: {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

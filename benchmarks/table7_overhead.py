@@ -1,0 +1,73 @@
+"""Paper Table 7 + Fig. 6: run-time optimization overhead.
+
+Measures the real host-side f_latency (feature extraction) and c_latency
+(conversion to the latency-optimal format) per suite matrix, sorted by nnz
+(Table 7), and scores the learned overhead estimators on a held-out split
+(Fig. 6). Absolute times are smaller than the paper's (scaled matrices,
+different host) — the protocol and the scaling trend are the artifact."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALES, get_dataset, print_table, save_result
+from repro.core import OverheadPredictor, measure_overheads
+from repro.ml.metrics import r2_score
+from repro.sparse.generate import generate_by_name
+
+
+def run(scale_name: str = "paper") -> dict:
+    ds = get_dataset(scale_name)
+    scale = SCALES[scale_name]["scale"]
+    suite = [m for m in ds.matrices if not m.startswith("synth")]
+    samples = []
+    for m in suite:
+        dense = generate_by_name(m, scale=scale)
+        samples.append(measure_overheads(dense, m))
+    best_fmt = {m: ds.best_record(m, "latency").config.fmt for m in suite}
+    rows = []
+    payload = {"per_matrix": {}}
+    order = sorted(samples, key=lambda s: s.features.nnz)
+    for s in order:
+        c = s.c_latency[best_fmt[s.matrix]]
+        payload["per_matrix"][s.matrix] = {
+            "nnz": s.features.nnz,
+            "f_latency_s": s.f_latency,
+            "c_latency_s": c,
+            "total_s": s.f_latency + c,
+        }
+        rows.append([s.matrix, int(s.features.nnz), s.f_latency * 1e3, c * 1e3,
+                     (s.f_latency + c) * 1e3])
+    print_table(
+        "Table 7 — measured overheads (ms), ascending nnz",
+        ["matrix", "nnz", "f_latency", "c_latency", "f+c"],
+        rows,
+        fmt="9.2f",
+    )
+    # Fig. 6: estimator accuracy (held-out split over matrices)
+    n_test = max(len(samples) // 4, 2)
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(len(samples))
+    test = [samples[i] for i in idx[:n_test]]
+    train = [samples[i] for i in idx[n_test:]]
+    op = OverheadPredictor().fit(train)
+    f_true = [s.f_latency for s in test]
+    f_pred = [op.predict_f(s.features) for s in test]
+    c_true = [s.c_latency["ell"] for s in test]
+    c_pred = [op.predict_c(s.features, "ell") for s in test]
+    payload["fig6"] = {
+        "f_r2": r2_score(f_true, f_pred),
+        "c_r2_ell": r2_score(c_true, c_pred),
+    }
+    print_table(
+        "Fig.6 — overhead-estimator accuracy (held-out)",
+        ["estimator", "R^2"],
+        [["f_latency", payload["fig6"]["f_r2"]], ["c_latency(ell)", payload["fig6"]["c_r2_ell"]]],
+        fmt="8.3f",
+    )
+    save_result("table7", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

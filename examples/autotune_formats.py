@@ -1,0 +1,50 @@
+"""Run-time-mode demo over the full matrix suite (deliverable b):
+per-objective format selection + conversion decisions, printed as the
+paper's Fig. 5(b) pipeline would execute inside an iterative solver.
+
+  PYTHONPATH=src python examples/autotune_formats.py --objective efficiency
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (
+    AutoSpMV,
+    AutoSpmvPredictor,
+    OverheadPredictor,
+    PredictorConfig,
+    collect_dataset,
+    measure_overheads,
+)
+from repro.sparse.generate import MATRIX_NAMES, generate_by_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--objective", default="efficiency",
+                    choices=["latency", "energy", "power", "efficiency"])
+    ap.add_argument("--scale", type=float, default=0.002)
+    ap.add_argument("--iterations", type=int, default=2000)
+    ap.add_argument("--n-matrices", type=int, default=12)
+    args = ap.parse_args()
+
+    names = MATRIX_NAMES[: args.n_matrices]
+    ds = collect_dataset(scale=args.scale, names=names, n_extra=8)
+    pred = AutoSpmvPredictor(PredictorConfig()).fit(ds)
+    oh = OverheadPredictor().fit(
+        [measure_overheads(generate_by_name(m, scale=args.scale), m) for m in names[:8]]
+    )
+    tuner = AutoSpMV(pred, oh)
+
+    print(f"{'matrix':22s} {'format':6s} {'convert':8s} {'gain/iter':>10s} {'overhead':>9s}")
+    for m in names:
+        dense = generate_by_name(m, scale=args.scale)
+        rt = tuner.run_time_optimize(dense, args.objective, n_iterations=args.iterations)
+        print(f"{m:22s} {rt.best_format:6s} {str(rt.convert):8s} "
+              f"{rt.predicted_gain_per_iter:10.3g} {rt.predicted_overhead*1e3:8.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

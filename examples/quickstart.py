@@ -1,0 +1,82 @@
+"""Quickstart: Auto-SpMV end to end on one matrix.
+
+  PYTHONPATH=src python examples/quickstart.py [--matrix consph] [--objective latency]
+
+Flow (paper Fig. 5): build the tuning dataset -> train predictors ->
+compile-time mode (predict the kernel schedule, specialize the Pallas CSR
+kernel) -> run-time mode (predict the best format, check the conversion
+overhead, convert) -> execute both kernels and verify against the dense
+product.
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import (
+    AutoSpMV,
+    AutoSpmvPredictor,
+    OverheadPredictor,
+    PredictorConfig,
+    collect_dataset,
+    measure_overheads,
+)
+from repro.sparse.generate import MATRIX_NAMES, generate_by_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--matrix", default="consph", choices=sorted(MATRIX_NAMES))
+    ap.add_argument("--objective", default="latency",
+                    choices=["latency", "energy", "power", "efficiency"])
+    ap.add_argument("--scale", type=float, default=0.002)
+    ap.add_argument("--iterations", type=int, default=5000,
+                    help="solver iterations amortizing the conversion cost")
+    args = ap.parse_args()
+
+    print("[1/4] collecting tuning dataset (TPU cost model over the suite)...")
+    t0 = time.time()
+    ds = collect_dataset(scale=args.scale, names=MATRIX_NAMES[:16], n_extra=8)
+    print(f"      {len(ds)} records in {time.time()-t0:.1f}s")
+
+    print("[2/4] training predictors (decision tree, paper Table 5 winner)...")
+    pred = AutoSpmvPredictor(PredictorConfig()).fit(ds)
+    overhead = OverheadPredictor().fit(
+        [measure_overheads(generate_by_name(m, scale=args.scale), m)
+         for m in MATRIX_NAMES[:8]]
+    )
+    tuner = AutoSpMV(pred, overhead)
+
+    dense = generate_by_name(args.matrix, scale=args.scale)
+    x = np.random.default_rng(0).normal(size=dense.shape[1]).astype(np.float32)
+    ref = dense @ x
+
+    print(f"[3/4] compile-time mode ({args.objective}) on {args.matrix}...")
+    ct = tuner.compile_time_optimize(dense, args.objective)
+    y = np.asarray(ct.kernel(x))
+    err = np.abs(y - ref).max() / (np.abs(ref).max() + 1e-9)
+    print(f"      schedule: {ct.schedule}")
+    print(f"      predicted objectives: "
+          + ", ".join(f"{k}={v:.3g}" for k, v in ct.predicted.items()))
+    print(f"      kernel correct: rel.err {err:.2e}")
+
+    print(f"[4/4] run-time mode ({args.objective})...")
+    rt = tuner.run_time_optimize(
+        dense, args.objective, n_iterations=args.iterations
+    )
+    print(f"      best format: {rt.best_format}; convert: {rt.convert} "
+          f"(gain/iter {rt.predicted_gain_per_iter:.3g}, "
+          f"overhead {rt.predicted_overhead*1e3:.1f} ms)")
+    if rt.kernel is not None:
+        y2 = np.asarray(rt.kernel(x))
+        err2 = np.abs(y2 - ref).max() / (np.abs(ref).max() + 1e-9)
+        print(f"      converted kernel correct: rel.err {err2:.2e}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Checkpoint manager (orbax is not installed): atomic, keep-K, mesh-agnostic.
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``manifest.json``. Writes go to a
+``tmp_`` directory first and are renamed atomically, so a preemption during
+save never corrupts the latest checkpoint. Arrays are stored unsharded
+(gathered to host), and ``restore`` re-shards onto whatever mesh/shardings
+the caller passes — this is the elastic-rescale path: a checkpoint written
+on a 16x16 mesh restores onto 2x16x16 or a single CPU equally (DESIGN.md §6).
+bfloat16 leaves round-trip via a uint16 view (npz has no bf16 dtype).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.logging import get_logger
+
+log = get_logger("checkpoint")
+
+_SEP = "//"
+
+
+def _flatten_with_paths(tree: Any) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> Path:
+        t0 = time.perf_counter()
+        tmp = self.dir / f"tmp_{step}"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten_with_paths(tree)
+        arrays, manifest = {}, {"step": step, "extra": extra or {}, "leaves": {}}
+        for key, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            dtype = str(arr.dtype)
+            if arr.dtype == jnp.bfloat16:
+                arr = arr.view(np.uint16)
+                dtype = "bfloat16"
+            arrays[key] = arr
+            manifest["leaves"][key] = {"dtype": dtype, "shape": list(arr.shape)}
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        self._gc()
+        log.info("saved step %d (%d leaves, %.2fs)", step, len(flat), time.perf_counter() - t0)
+        return final
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        return sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*") if p.is_dir()
+        )
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        target_like: Any,
+        step: int | None = None,
+        shardings: Any = None,
+    ) -> tuple[Any, dict]:
+        """Restore into the structure of ``target_like``; if ``shardings``
+        (same pytree structure, NamedSharding leaves) is given, place leaves
+        accordingly — the mesh may differ from the one that saved."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        blob = np.load(path / "arrays.npz")
+        flat_target = _flatten_with_paths(target_like)
+        flat_shard = _flatten_with_paths(shardings) if shardings is not None else {}
+        out = {}
+        for key, like in flat_target.items():
+            if key not in manifest["leaves"]:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = blob[key]
+            if manifest["leaves"][key]["dtype"] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            if tuple(arr.shape) != tuple(like.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != target {like.shape}")
+            if key in flat_shard and flat_shard[key] is not None:
+                out[key] = jax.device_put(arr, flat_shard[key])
+            else:
+                out[key] = jnp.asarray(arr)
+        # rebuild original structure
+        leaves_ordered = []
+        for path_, _ in jax.tree_util.tree_flatten_with_path(target_like)[0]:
+            key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+            leaves_ordered.append(out[key])
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(target_like), leaves_ordered
+        )
+        log.info("restored step %d from %s", step, path)
+        return tree, manifest["extra"]

@@ -1,0 +1,21 @@
+"""qwen3-0.6b [hf:Qwen/Qwen3-0.6B family]: 28L d=1024 16H GQA kv=8,
+head_dim=128 (explicit), d_ff=3072 vocab=151936, qk-norm."""
+
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)
+
+REDUCED = reduced(CONFIG, qk_norm=True)

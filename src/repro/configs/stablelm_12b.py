@@ -1,0 +1,18 @@
+"""stablelm-12b [hf:stabilityai/stablelm-2-12b]: 40L d=5120 32H GQA kv=8
+d_ff=13824 vocab=100352."""
+
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab_size=100_352,
+    param_dtype="bfloat16",
+)
+
+REDUCED = reduced(CONFIG)

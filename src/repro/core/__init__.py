@@ -1,0 +1,79 @@
+"""The paper's primary contribution: the Auto-SpMV tuning framework.
+
+features -> dataset -> predictors -> {compile-time, run-time} optimization,
+plus the objective models (TPU cost model + measured CPU) and the AutoML
+(HPO) stage.
+"""
+
+from repro.core.autotuner import AutoSpMV, CompileTimeResult, RunTimeResult
+from repro.core.dataset import TuningDataset, TuningRecord, collect_dataset
+from repro.core.features import (
+    FEATURE_NAMES,
+    SparsityFeatures,
+    extract_features,
+    features_from_assignment_histogram,
+    features_from_csr_indptr,
+)
+from repro.core.objectives import (
+    HARDWARE,
+    MINIMIZE,
+    OBJECTIVES,
+    MatrixStats,
+    ObjectiveValues,
+    TpuCostModel,
+    TPU_V4,
+    TPU_V5E,
+    footprint,
+    measure_cpu_formats,
+)
+from repro.core.overhead import OverheadPredictor, OverheadSample, measure_overheads
+from repro.core.predictor import AutoSpmvPredictor, PredictorConfig
+from repro.core.tuning_space import (
+    ALL_KNOBS,
+    DEFAULT_CONFIG,
+    KNOBS,
+    PAPER_KNOBS,
+    TuningConfig,
+    compile_time_space,
+    full_space,
+    knob_value,
+    schedule_space,
+)
+
+__all__ = [
+    "AutoSpMV",
+    "CompileTimeResult",
+    "RunTimeResult",
+    "TuningDataset",
+    "TuningRecord",
+    "collect_dataset",
+    "FEATURE_NAMES",
+    "SparsityFeatures",
+    "extract_features",
+    "features_from_assignment_histogram",
+    "features_from_csr_indptr",
+    "HARDWARE",
+    "MINIMIZE",
+    "OBJECTIVES",
+    "MatrixStats",
+    "ObjectiveValues",
+    "TpuCostModel",
+    "TPU_V4",
+    "TPU_V5E",
+    "footprint",
+    "measure_cpu_formats",
+    "OverheadPredictor",
+    "OverheadSample",
+    "measure_overheads",
+    "AutoSpmvPredictor",
+    "PredictorConfig",
+    "ALL_KNOBS",
+    "DEFAULT_CONFIG",
+    "KNOBS",
+    "PAPER_KNOBS",
+    "TuningConfig",
+    "compile_time_space",
+    "full_space",
+    "knob_value",
+    "schedule_space",
+]

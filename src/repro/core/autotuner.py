@@ -1,0 +1,123 @@
+"""The Auto-SpMV optimizer: compile-time + run-time modes (paper §5, Fig. 5).
+
+Compile-time mode (format fixed to CSR, §5.2):
+  1. compute the sparsity features;
+  2. predict the optimal kernel schedule (TPU compile-time parameters);
+  3. convert to CSR and specialize the Pallas kernel with that schedule.
+
+Run-time mode (§5.3):
+  1. compute the sparsity features;
+  2. predict the optimal sparse format for the target objective;
+  3. estimate the optimization overhead (feature extraction + conversion +
+     2 model inferences);
+  4. convert only if the predicted gain over the remaining iterations
+     exceeds the predicted overhead.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.features import SparsityFeatures, extract_features
+from repro.core.overhead import OverheadPredictor
+from repro.core.predictor import AutoSpmvPredictor
+from repro.core.tuning_space import DEFAULT_CONFIG, TuningConfig
+from repro.kernels.common import DEFAULT_SCHEDULE, KernelSchedule
+from repro.kernels.ops import PreparedSpmv, compile_spmv
+from repro.utils.logging import get_logger
+
+log = get_logger("core.autotuner")
+
+
+@dataclass(frozen=True)
+class CompileTimeResult:
+    features: SparsityFeatures
+    schedule: KernelSchedule
+    kernel: PreparedSpmv  # CSR kernel specialized with the predicted schedule
+    predicted: dict[str, float]  # estimated objective values
+
+
+@dataclass(frozen=True)
+class RunTimeResult:
+    features: SparsityFeatures
+    best_format: str
+    convert: bool  # decision after the overhead check
+    predicted_gain_per_iter: float  # objective units per kernel invocation
+    predicted_overhead: float  # seconds (f + c + o + p)
+    kernel: PreparedSpmv | None  # converted kernel when convert=True
+
+
+@dataclass
+class AutoSpMV:
+    predictor: AutoSpmvPredictor
+    overhead: OverheadPredictor | None = None
+    interpret: bool = True
+
+    # ------------------------------------------------------------ compile time
+    def compile_time_optimize(
+        self, dense: np.ndarray, objective: str = "latency"
+    ) -> CompileTimeResult:
+        feats = extract_features(dense)
+        schedule = self.predictor.predict_schedule(feats, objective)
+        kernel = compile_spmv(dense, "csr", schedule, interpret=self.interpret)
+        predicted = {
+            obj: self.predictor.estimate_objective(
+                feats, TuningConfig("csr", schedule), obj
+            )
+            for obj in ("latency", "energy", "power", "efficiency")
+        }
+        log.info("compile-time: %s -> %s", objective, schedule)
+        return CompileTimeResult(feats, schedule, kernel, predicted)
+
+    # ---------------------------------------------------------------- run time
+    def run_time_optimize(
+        self,
+        dense: np.ndarray,
+        objective: str = "latency",
+        *,
+        n_iterations: int = 1000,
+        current_format: str = "csr",
+        schedule: KernelSchedule = DEFAULT_SCHEDULE,
+    ) -> RunTimeResult:
+        feats = extract_features(dense)
+        best_fmt = self.predictor.predict_format(feats, objective)
+        cur = self.predictor.estimate_objective(
+            feats, TuningConfig(current_format, schedule), objective
+        )
+        new = self.predictor.estimate_objective(
+            feats, TuningConfig(best_fmt, schedule), objective
+        )
+        # gain per kernel invocation, in the objective's native unit
+        gain = (cur - new) if objective != "efficiency" else (new - cur)
+        if self.overhead is not None:
+            oh = self.overhead.total_overhead(feats, best_fmt)
+        else:
+            oh = 0.0
+        # the decision rule compares time-like quantities; for non-latency
+        # objectives the paper still gates on wall-clock overhead vs the
+        # latency gain of the chosen config (§5.3) — reproduce that:
+        lat_cur = self.predictor.estimate_objective(
+            feats, TuningConfig(current_format, schedule), "latency"
+        )
+        lat_new = self.predictor.estimate_objective(
+            feats, TuningConfig(best_fmt, schedule), "latency"
+        )
+        benefit_s = (lat_cur - lat_new) * n_iterations
+        convert = best_fmt != current_format and gain > 0 and benefit_s > oh
+        kernel = (
+            compile_spmv(dense, best_fmt, schedule, interpret=self.interpret)
+            if convert
+            else None
+        )
+        log.info(
+            "run-time: obj=%s fmt %s->%s gain/iter=%.3g overhead=%.3gs convert=%s",
+            objective,
+            current_format,
+            best_fmt,
+            gain,
+            oh,
+            convert,
+        )
+        return RunTimeResult(feats, best_fmt, convert, gain, oh, kernel)

@@ -1,0 +1,334 @@
+"""Objective models: latency, energy, average power, energy efficiency.
+
+The paper measures these four objectives with NVML power sensors on two GPUs
+(§6.3). This container has neither GPU nor TPU, so objectives come from two
+clearly-separated sources (DESIGN.md §2):
+
+* ``measure_cpu_formats`` — *real* wall-time measurements of the jnp
+  reference SpMV per format on the host CPU (the paper's repetition-and-
+  average protocol). Used for the run-time (format-selection) labels.
+* ``TpuCostModel`` — an analytical TPU v5e model evaluated on exact storage
+  statistics. It models the resource trade-offs each schedule knob controls
+  (grid-step overhead vs tile size, gather/scatter throughput, MXU vs VPU
+  rates, VMEM feasibility, unroll ILP vs register-spill, accumulation
+  precision) and produces all four objectives. Constants are documented
+  estimates: the model's *orderings* (which config is best) drive the
+  tuner, not its absolute numbers.
+
+Energy accounting follows the paper's measurement protocol (§6.3): idle
+power is EXCLUDED — E = FLOPs*e_flop + HBM_bytes*e_hbm + VMEM_touch*e_vmem +
+grid_steps*e_step (dynamic only); avg power = E/t; efficiency = useful
+MFLOP/s per watt, with *useful* = 2*nnz (padding compute costs energy but
+adds no useful FLOPs — exactly why ELL loses efficiency on power-law
+matrices, paper Fig. 10). ``p_static`` remains in the profile for TCO-style
+studies but does not enter the four paper objectives.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+from repro.kernels.common import LANE, VMEM_BYTES, KernelSchedule, ceil_to
+from repro.sparse.formats import FORMAT_NAMES
+
+OBJECTIVES = ("latency", "energy", "power", "efficiency")
+# for argmin-style selection: efficiency is maximized, the rest minimized
+MINIMIZE = {"latency": True, "energy": True, "power": True, "efficiency": False}
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    mxu_flops_bf16: float  # peak MXU FLOP/s, bf16 accumulate
+    mxu_flops_f32: float
+    vpu_flops_bf16: float  # vector-unit FLOP/s
+    vpu_flops_f32: float
+    hbm_bw: float  # bytes/s
+    gather_rate: float  # in-kernel dynamic-gather elements/s
+    scatter_rate: float  # in-kernel scatter-add elements/s
+    grid_step_ns: float  # fixed per-grid-step cost
+    vmem_bytes: int
+    e_flop_bf16: float  # J/FLOP
+    e_flop_f32: float
+    e_hbm_byte: float  # J/byte
+    e_vmem_byte: float
+    e_grid_step: float  # J per grid step (control/DMA-descriptor energy;
+    # what makes tiny-tile schedules power-hungry — the occupancy analogue)
+    p_static: float  # W
+    p_max: float  # W (package cap)
+
+
+# TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM (assignment constants); the rest
+# are engineering estimates with sources noted inline.
+TPU_V5E = HardwareProfile(
+    name="tpu_v5e",
+    mxu_flops_bf16=197e12,
+    mxu_flops_f32=197e12 / 8,  # fp32 via MXU passes
+    vpu_flops_bf16=8e12,  # 8x128 VPU, ~940 MHz, FMA
+    vpu_flops_f32=4e12,
+    hbm_bw=819e9,
+    gather_rate=7.5e9,  # ~8 lanes/cycle dynamic gather
+    scatter_rate=1.9e9,  # serialized read-modify-write
+    grid_step_ns=150.0,
+    vmem_bytes=VMEM_BYTES,
+    e_flop_bf16=0.5e-12,
+    e_flop_f32=1.0e-12,
+    e_hbm_byte=50e-12,  # ~6 pJ/bit HBM2e access
+    e_vmem_byte=5e-12,
+    e_grid_step=12e-9,
+    p_static=70.0,
+    p_max=220.0,
+)
+
+# TPU v4 for the hardware-sensitivity study (paper Fig. 12: Turing->Pascal);
+# 275 TFLOP/s bf16, 1.2 TB/s HBM2.
+TPU_V4 = HardwareProfile(
+    name="tpu_v4",
+    mxu_flops_bf16=275e12,
+    mxu_flops_f32=275e12 / 8,
+    vpu_flops_bf16=9e12,
+    vpu_flops_f32=4.5e12,
+    hbm_bw=1228e9,
+    gather_rate=8.5e9,
+    scatter_rate=2.1e9,
+    grid_step_ns=180.0,
+    vmem_bytes=VMEM_BYTES,
+    e_flop_bf16=0.7e-12,
+    e_flop_f32=1.4e-12,
+    e_hbm_byte=55e-12,
+    e_vmem_byte=6e-12,
+    e_grid_step=15e-9,
+    p_static=90.0,
+    p_max=280.0,
+)
+
+HARDWARE = {"tpu_v5e": TPU_V5E, "tpu_v4": TPU_V4}
+
+
+class MatrixStats:
+    """Cached structural statistics of one matrix (host-side numpy)."""
+
+    def __init__(self, dense: np.ndarray):
+        dense = np.asarray(dense)
+        self.n_rows, self.n_cols = dense.shape
+        self.row_counts = (dense != 0).sum(axis=1).astype(np.int64)
+        self.nnz = int(self.row_counts.sum())
+        self.max_nnz = int(self.row_counts.max(initial=0))
+        self._mask = dense != 0
+
+    @lru_cache(maxsize=16)
+    def block_occupancy(self, br: int, bc: int) -> tuple[int, int]:
+        """(#occupied blocks, max occupied blocks per block-row)."""
+        pr, pc = ceil_to(self.n_rows, br), ceil_to(self.n_cols, bc)
+        m = np.zeros((pr, pc), dtype=bool)
+        m[: self.n_rows, : self.n_cols] = self._mask
+        occ = m.reshape(pr // br, br, pc // bc, bc).any(axis=(1, 3))
+        per_row = occ.sum(axis=1)
+        return int(occ.sum()), int(per_row.max(initial=0))
+
+    @lru_cache(maxsize=16)
+    def sell_storage(self, C: int, q: int) -> tuple[int, int]:
+        """(total stored elems, max width) for SELL-C-q."""
+        n_slices = (self.n_rows + C - 1) // C
+        total, maxw = 0, 0
+        for s in range(n_slices):
+            w = int(self.row_counts[s * C : (s + 1) * C].max(initial=0))
+            w = ceil_to(max(w, 1), q)
+            total += w * C
+            maxw = max(maxw, w)
+        return total, maxw
+
+
+@dataclass(frozen=True)
+class KernelFootprint:
+    """Work/traffic summary of one (matrix, format, schedule) point."""
+
+    useful_flops: float
+    total_flops: float  # includes padding compute
+    hbm_bytes: float  # format storage + X + Y traffic
+    gather_elems: float  # in-kernel dynamic gathers
+    scatter_elems: float  # in-kernel scatter-adds
+    grid_steps: float
+    mxu_fraction: float  # fraction of FLOPs running on the MXU
+    vmem_resident_bytes: float  # steady-state VMEM requirement
+    feasible: bool
+    note: str = ""
+
+
+def footprint(
+    stats: MatrixStats, fmt: str, schedule: KernelSchedule
+) -> KernelFootprint:
+    """Exact storage/work statistics for the cost model (no materialization)."""
+    if fmt not in FORMAT_NAMES:
+        raise ValueError(f"unknown format {fmt!r}")
+    n, m, nnz = stats.n_rows, stats.n_cols, stats.nnz
+    rpb, nt = schedule.rows_per_block, schedule.nnz_tile
+    val_b, idx_b = 4.0, 4.0  # fp32 values, int32 indices
+    x_bytes = m * val_b
+    y_bytes = n * val_b
+    useful = 2.0 * nnz
+
+    if fmt == "ell":
+        width = ceil_to(max(stats.max_nnz, 1), nt)
+        rows = ceil_to(n, rpb)
+        stored = float(rows) * width
+        hbm = stored * (val_b + idx_b) + x_bytes + y_bytes
+        steps = (rows / rpb) * (width / nt)
+        tile_b = rpb * nt * (val_b + idx_b)
+        vmem = 2 * tile_b + (x_bytes if schedule.x_residency == "vmem" else 0) + rpb * val_b
+        return KernelFootprint(useful, 2 * stored, hbm, stored, 0.0, steps, 0.0,
+                               vmem, vmem <= VMEM_BYTES and schedule.x_residency == "vmem",
+                               note="" if schedule.x_residency == "vmem" else
+                               "ELL requires VMEM-resident X on TPU")
+    if fmt == "sell":
+        C = rpb
+        total, maxw = stats.sell_storage(C, nt)
+        n_slices = (n + C - 1) // C
+        stored = float(total)
+        hbm = stored * (val_b + idx_b) + x_bytes + y_bytes
+        steps = n_slices * (maxw / nt)  # grid includes masked tiles
+        tile_b = nt * C * (val_b + idx_b)
+        vmem = 2 * tile_b + (x_bytes if schedule.x_residency == "vmem" else 0) + C * val_b
+        return KernelFootprint(useful, 2 * stored, hbm, stored, 0.0, steps, 0.0,
+                               vmem, vmem <= VMEM_BYTES and schedule.x_residency == "vmem",
+                               note="" if schedule.x_residency == "vmem" else
+                               "SELL requires VMEM-resident X on TPU")
+    if fmt == "csr":
+        nnz_pad = ceil_to(max(nnz, 1), nt)
+        stored = float(nnz_pad)
+        # data + cols + row_ids + indptr + x + y
+        hbm = stored * (val_b + 2 * idx_b) + (n + 1) * idx_b + x_bytes + y_bytes
+        steps = nnz_pad / nt
+        tile_b = nt * (val_b + 2 * idx_b)
+        vmem = 2 * tile_b + x_bytes + (n + 1) * val_b  # y resident too
+        return KernelFootprint(useful, 2 * stored, hbm, stored, stored, steps, 0.0,
+                               vmem, vmem <= VMEM_BYTES and schedule.x_residency == "vmem",
+                               note="" if schedule.x_residency == "vmem" else
+                               "CSR requires VMEM-resident X and Y on TPU")
+    # bell
+    br, bc = min(rpb, 256), LANE
+    n_blocks, max_blocks = stats.block_occupancy(br, bc)
+    nbr = ceil_to(n, br) // br
+    stored_blocks = float(nbr) * max(max_blocks, 1)
+    stored = stored_blocks * br * bc
+    x_traffic = (
+        stored_blocks * bc * val_b  # streamed panels (scalar-prefetch DMA)
+        if schedule.x_residency == "stream"
+        else x_bytes
+    )
+    hbm = stored * val_b + stored_blocks * idx_b + x_traffic + y_bytes
+    steps = stored_blocks
+    tile_b = br * bc * val_b + bc * val_b
+    vmem = 2 * tile_b + br * val_b + (x_bytes if schedule.x_residency == "vmem" else 0)
+    return KernelFootprint(useful, 2 * stored, hbm, 0.0, 0.0, steps, 1.0,
+                           vmem, vmem <= VMEM_BYTES)
+
+
+@dataclass(frozen=True)
+class ObjectiveValues:
+    latency: float  # seconds
+    energy: float  # joules
+    power: float  # watts (average)
+    efficiency: float  # useful MFLOPS / watt
+    feasible: bool = True
+
+    def as_dict(self) -> dict[str, float]:
+        return {
+            "latency": self.latency,
+            "energy": self.energy,
+            "power": self.power,
+            "efficiency": self.efficiency,
+        }
+
+    def get(self, objective: str) -> float:
+        return self.as_dict()[objective]
+
+
+INFEASIBLE = ObjectiveValues(math.inf, math.inf, math.inf, 0.0, feasible=False)
+
+
+class TpuCostModel:
+    def __init__(self, hw: HardwareProfile = TPU_V5E):
+        self.hw = hw
+
+    def evaluate(
+        self, stats: MatrixStats, fmt: str, schedule: KernelSchedule
+    ) -> ObjectiveValues:
+        hw = self.hw
+        fp = footprint(stats, fmt, schedule)
+        if not fp.feasible:
+            return INFEASIBLE
+        bf16 = schedule.accum_dtype == "bfloat16"
+
+        # --- compute time ------------------------------------------------
+        mxu_rate = hw.mxu_flops_bf16 if bf16 else hw.mxu_flops_f32
+        vpu_rate = hw.vpu_flops_bf16 if bf16 else hw.vpu_flops_f32
+        # matvec keeps only ~1/16 of the MXU busy (one operand is a vector)
+        mxu_eff_rate = mxu_rate / 16.0
+        # unroll buys gather ILP until the VREG budget spills; bf16 packs
+        # two elements per gather lane
+        ilp = 1.0 + 0.18 * math.log2(schedule.unroll)
+        live_regs = schedule.unroll * schedule.rows_per_block
+        spill = 1.35 if live_regs > 2048 else 1.0
+        g_rate = hw.gather_rate * ilp * (1.5 if bf16 else 1.0) / spill
+        t_mxu = fp.mxu_fraction * fp.total_flops / mxu_eff_rate
+        vpu_flops = (1.0 - fp.mxu_fraction) * fp.total_flops
+        t_vpu = vpu_flops / vpu_rate
+        t_gather = fp.gather_elems / g_rate
+        t_scatter = fp.scatter_elems / (hw.scatter_rate * ilp / spill)
+        t_compute = t_mxu + max(t_vpu, t_gather) + t_scatter
+
+        # --- memory time ---------------------------------------------------
+        t_mem = fp.hbm_bytes / hw.hbm_bw
+
+        # --- grid overhead (occupancy analogue) ----------------------------
+        # double-buffering hides overhead only when tiles are big enough
+        pipeline_eff = min(1.0, fp.vmem_resident_bytes / (hw.vmem_bytes * 0.05) + 0.5)
+        t_grid = fp.grid_steps * hw.grid_step_ns * 1e-9 / pipeline_eff
+
+        latency = max(t_compute, t_mem) + t_grid
+
+        # --- energy --------------------------------------------------------
+        e_flop = hw.e_flop_bf16 if bf16 else hw.e_flop_f32
+        elem_bytes = 2.0 if bf16 else 4.0
+        vmem_touch = fp.total_flops * elem_bytes  # operand bytes touched in VMEM
+        dyn = (
+            fp.total_flops * e_flop
+            + fp.hbm_bytes * hw.e_hbm_byte
+            + vmem_touch * hw.e_vmem_byte
+            + (fp.gather_elems + 3 * fp.scatter_elems) * 4.0 * hw.e_vmem_byte
+            + fp.grid_steps * hw.e_grid_step
+        )
+        # idle power excluded, per the paper's §6.3 protocol
+        energy = dyn
+        power = min(energy / latency, hw.p_max - hw.p_static)
+        mflops = fp.useful_flops / latency / 1e6
+        return ObjectiveValues(latency, energy, power, mflops / power)
+
+
+# ---------------------------------------------------------------------------
+# measured (CPU wall-time) source — the run-time-mode ground truth
+# ---------------------------------------------------------------------------
+
+
+def measure_cpu_formats(
+    dense: np.ndarray, reps: int = 3, warmup: int = 1, seed: int = 0
+) -> dict[str, float]:
+    """Mean wall-time (s) of the jit'd jnp SpMV per format on this host."""
+    import jax.numpy as jnp
+
+    from repro.sparse import from_dense, spmv
+    from repro.utils.timing import measure_wall_time
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=dense.shape[1]).astype(np.float32))
+    out = {}
+    for fmt in FORMAT_NAMES:
+        mat = from_dense(dense, fmt)
+        res = measure_wall_time(lambda: spmv(mat, x), warmup=warmup, reps=reps)
+        out[fmt] = res["mean_s"]
+    return out

@@ -1,0 +1,81 @@
+"""Run-time overhead measurement + prediction (paper §5.3, §7.5, Fig. 6).
+
+Total run-time-mode overhead = f_latency (feature extraction) + o_latency
+(overhead prediction) + p_latency (format prediction) + c_latency
+(conversion). f and c dominate and scale with the matrix; o and p are
+constant-time model inferences. Auto-SpMV converts only when the predicted
+gain over the remaining solver iterations exceeds the predicted overhead.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.features import SparsityFeatures, extract_features
+from repro.ml.linear import Ridge
+from repro.sparse.formats import FORMAT_NAMES, from_dense
+from repro.utils.logging import get_logger
+
+log = get_logger("core.overhead")
+
+
+@dataclass(frozen=True)
+class OverheadSample:
+    matrix: str
+    features: SparsityFeatures
+    f_latency: float
+    c_latency: dict[str, float]  # per target format
+
+
+def measure_overheads(dense: np.ndarray, name: str = "?") -> OverheadSample:
+    """Wall-time the actual host-side feature extraction and conversions."""
+    t0 = time.perf_counter()
+    feats = extract_features(dense)
+    f_latency = time.perf_counter() - t0
+    c_latency = {}
+    for fmt in FORMAT_NAMES:
+        t0 = time.perf_counter()
+        from_dense(dense, fmt)
+        c_latency[fmt] = time.perf_counter() - t0
+    return OverheadSample(name, feats, f_latency, c_latency)
+
+
+def _design_row(features: SparsityFeatures) -> np.ndarray:
+    # overheads scale ~linearly in n and nnz; keep raw terms + log terms
+    v = features.vector()
+    return np.concatenate([v[:2] / 1e6, np.log1p(v)])
+
+
+class OverheadPredictor:
+    """Learned f_latency / c_latency estimators (one ridge per format)."""
+
+    def __init__(self):
+        self._f_model: Ridge | None = None
+        self._c_models: dict[str, Ridge] = {}
+
+    def fit(self, samples: list[OverheadSample]) -> "OverheadPredictor":
+        X = np.stack([_design_row(s.features) for s in samples])
+        self._f_model = Ridge(alpha=1e-3).fit(X, np.array([s.f_latency for s in samples]))
+        for fmt in FORMAT_NAMES:
+            y = np.array([s.c_latency[fmt] for s in samples])
+            self._c_models[fmt] = Ridge(alpha=1e-3).fit(X, y)
+        return self
+
+    def predict_f(self, features: SparsityFeatures) -> float:
+        x = _design_row(features)[None, :]
+        return float(max(self._f_model.predict(x)[0], 0.0))
+
+    def predict_c(self, features: SparsityFeatures, fmt: str) -> float:
+        x = _design_row(features)[None, :]
+        return float(max(self._c_models[fmt].predict(x)[0], 0.0))
+
+    def total_overhead(
+        self, features: SparsityFeatures, fmt: str, inference_latency: float = 2e-3
+    ) -> float:
+        """f + c + (o + p): o/p are constant model-inference costs (the
+        paper measures ~20 ms on its host; ours are single ridge/tree
+        inferences, defaulting to 2 ms)."""
+        return self.predict_f(features) + self.predict_c(features, fmt) + 2 * inference_latency

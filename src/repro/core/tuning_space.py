@@ -1,0 +1,97 @@
+"""The Auto-SpMV configuration space (format x compile-time schedule).
+
+``KNOBS`` maps each of the paper's tunable parameters to its TPU analogue on
+``KernelSchedule`` (DESIGN.md §2): ``tb_size`` -> rows_per_block,
+``maxrregcount`` -> unroll, ``memory`` -> x_residency; ``nnz_tile`` and
+``accum_dtype`` are TPU-only extras reported separately in benchmarks.
+
+The paper's *default* configuration (its comparison baseline) is the CSR
+format with untuned compiler parameters; ours is CSR with the default
+schedule.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Iterator
+
+from repro.kernels.common import (
+    ACCUM_DTYPE_CHOICES,
+    DEFAULT_SCHEDULE,
+    NNZ_TILE_CHOICES,
+    ROWS_PER_BLOCK_CHOICES,
+    UNROLL_CHOICES,
+    X_RESIDENCY_CHOICES,
+    KernelSchedule,
+)
+from repro.sparse.formats import FORMAT_NAMES
+
+
+@dataclass(frozen=True)
+class TuningConfig:
+    fmt: str
+    schedule: KernelSchedule
+
+    def as_dict(self) -> dict:
+        d = {"fmt": self.fmt}
+        d.update(self.schedule.as_dict())
+        return d
+
+
+DEFAULT_CONFIG = TuningConfig("csr", DEFAULT_SCHEDULE)
+
+# paper knob name -> (KernelSchedule field, choices)
+KNOBS: dict[str, tuple[str, tuple]] = {
+    "tb_size": ("rows_per_block", ROWS_PER_BLOCK_CHOICES),
+    "maxrregcount": ("unroll", UNROLL_CHOICES),
+    "memory": ("x_residency", X_RESIDENCY_CHOICES),
+    "nnz_tile": ("nnz_tile", NNZ_TILE_CHOICES),
+    "accum_dtype": ("accum_dtype", ACCUM_DTYPE_CHOICES),
+}
+PAPER_KNOBS = ("tb_size", "maxrregcount", "memory")  # Table 5 columns
+ALL_KNOBS = tuple(KNOBS)
+
+
+def schedule_space(
+    rows_per_block=ROWS_PER_BLOCK_CHOICES,
+    nnz_tile=NNZ_TILE_CHOICES,
+    unroll=UNROLL_CHOICES,
+    accum_dtype=ACCUM_DTYPE_CHOICES,
+    x_residency=X_RESIDENCY_CHOICES,
+) -> Iterator[KernelSchedule]:
+    """All valid schedules in the (sub)space (invalid combos skipped)."""
+    for rpb, nt, u, acc, xr in itertools.product(
+        rows_per_block, nnz_tile, unroll, accum_dtype, x_residency
+    ):
+        if nt % u:
+            continue  # unroll must divide the tile
+        yield KernelSchedule(
+            rows_per_block=rpb,
+            nnz_tile=nt,
+            unroll=u,
+            accum_dtype=acc,
+            x_residency=xr,
+        )
+
+
+def full_space(formats=FORMAT_NAMES, **schedule_kw) -> Iterator[TuningConfig]:
+    """The run-time-mode space: format x schedule."""
+    for fmt in formats:
+        for sched in schedule_space(**schedule_kw):
+            yield TuningConfig(fmt, sched)
+
+
+def compile_time_space(**schedule_kw) -> Iterator[TuningConfig]:
+    """The compile-time-mode space: CSR fixed (paper §5.2 step 3), schedule
+    free."""
+    return full_space(formats=("csr",), **schedule_kw)
+
+
+def knob_value(config: TuningConfig, knob: str):
+    field, _ = KNOBS[knob]
+    return getattr(config.schedule, field)
+
+
+def space_size(**kw) -> int:
+    return sum(1 for _ in full_space(**kw))

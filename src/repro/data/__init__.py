@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLMDataset, Prefetcher
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "Prefetcher"]

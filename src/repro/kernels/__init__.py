@@ -1,0 +1,38 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the SpMV kernel
+itself (CSR / ELL / BELL / SELL), schedule-parameterized by the Auto-SpMV
+compile-time mode. ``ops.py`` is the jit-facing wrapper; ``ref.py`` holds the
+pure-jnp oracles."""
+
+from repro.kernels.common import (
+    DEFAULT_SCHEDULE,
+    KernelSchedule,
+    ROWS_PER_BLOCK_CHOICES,
+    NNZ_TILE_CHOICES,
+    UNROLL_CHOICES,
+    ACCUM_DTYPE_CHOICES,
+    X_RESIDENCY_CHOICES,
+)
+from repro.kernels.ops import (
+    InfeasibleConfig,
+    PreparedSpmv,
+    compile_spmv,
+    prepare,
+    spmm_pallas,
+    spmv_pallas,
+)
+
+__all__ = [
+    "DEFAULT_SCHEDULE",
+    "KernelSchedule",
+    "ROWS_PER_BLOCK_CHOICES",
+    "NNZ_TILE_CHOICES",
+    "UNROLL_CHOICES",
+    "ACCUM_DTYPE_CHOICES",
+    "X_RESIDENCY_CHOICES",
+    "InfeasibleConfig",
+    "PreparedSpmv",
+    "compile_spmv",
+    "prepare",
+    "spmm_pallas",
+    "spmv_pallas",
+]

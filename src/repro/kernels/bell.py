@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: BELL (blocked-ELL) SpMV with scalar-prefetch gather.
+
+The TPU-native trick: the gather of X segments happens in the *pipeline*,
+not the kernel body. ``block_cols`` is a scalar-prefetch operand, and the
+BlockSpec index map of X reads it to DMA exactly the (bc,)-segment each
+stored block needs. Each grid step is then a dense (br, bc) x (bc,) matvec
+on MXU-aligned shapes — the reason BELL blocks are 8..256 x 128 here instead
+of the paper's GPU 2x2 (DESIGN.md §2).
+
+BELL is also the only format whose X access is *streamed* rather than
+VMEM-resident, i.e. the ``x_residency='stream'`` point of the tuning space.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import KernelSchedule
+
+
+def _bell_kernel(bc_ref, d_ref, x_ref, y_ref, *, accum_dtype):
+    del bc_ref  # consumed by the index maps
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    blk = d_ref[0, 0].astype(accum_dtype)  # (br, bc)
+    xs = x_ref[0].astype(accum_dtype)  # (bc,)
+    y = jnp.dot(blk, xs, preferred_element_type=accum_dtype)  # MXU matvec
+    y_ref[...] += y.reshape(y_ref.shape).astype(y_ref.dtype)
+
+
+def bell_spmv_pallas(
+    data: jax.Array,
+    block_cols: jax.Array,
+    x_panels: jax.Array,
+    schedule: KernelSchedule,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """SpMV over BELL storage.
+
+    ``data: (nbr, mb, br, bc)``, ``block_cols: (nbr, mb)`` int32,
+    ``x_panels: (n_col_blocks, bc)`` — X padded and reshaped into bc-panels
+    (ops.py prepares it). Returns ``y: (nbr, br)``.
+    """
+    nbr, mb, br, bc = data.shape
+    grid = (nbr, mb)
+    kernel = functools.partial(_bell_kernel, accum_dtype=schedule.jnp_accum_dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, br, bc), lambda i, j, bcols: (i, j, 0, 0)),
+            # the scalar-prefetch-driven gather: DMA the X panel this block needs
+            pl.BlockSpec((1, bc), lambda i, j, bcols: (bcols[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br), lambda i, j, bcols: (i, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nbr, br), x_panels.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(schedule.dimension_semantics, "arbitrary"),
+        ),
+        interpret=interpret,
+        name="bell_spmv",
+    )(block_cols, data, x_panels)

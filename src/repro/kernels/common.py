@@ -1,0 +1,90 @@
+"""Shared kernel-schedule definition for the Pallas SpMV kernels.
+
+``KernelSchedule`` is the TPU analogue of the paper's compile-time parameter
+vector (DESIGN.md §2 table):
+
+=====================  =========================  ============================
+paper (CUDA)           ours (Pallas/TPU)          resource trade-off
+=====================  =========================  ============================
+thread-block size      ``rows_per_block``         work granularity / grid size
+maxrregcount           ``unroll``                 VREG pressure vs ILP
+L1/shared split        ``x_residency``            VMEM residency policy for X
+(ILP per thread)       ``nnz_tile``               lane-aligned tile width
+(precision)            ``accum_dtype``            MXU/VPU rate vs accuracy
+(SM scheduling)        ``dimension_semantics``    grid-axis scheduling
+=====================  =========================  ============================
+
+All Pallas kernels accept a ``KernelSchedule`` and honour its tiling; the
+schedule is what the Auto-SpMV compile-time mode predicts per input matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+LANE = 128
+SUBLANE = 8
+
+# Discrete choice sets — the tuning space the classifiers predict over.
+ROWS_PER_BLOCK_CHOICES = (8, 16, 32, 64, 128, 256, 512)
+NNZ_TILE_CHOICES = (128, 256, 512, 1024)
+UNROLL_CHOICES = (1, 2, 4, 8)
+ACCUM_DTYPE_CHOICES = ("float32", "bfloat16")
+X_RESIDENCY_CHOICES = ("vmem", "stream")
+DIMENSION_SEMANTICS_CHOICES = ("parallel", "arbitrary")
+
+# TPU v5e VMEM per core (bytes) — the hard budget the schedule must respect.
+VMEM_BYTES = 128 * 1024 * 1024 // 2  # 64 MiB usable planning budget
+
+
+@dataclass(frozen=True)
+class KernelSchedule:
+    rows_per_block: int = 64
+    nnz_tile: int = LANE
+    unroll: int = 1
+    accum_dtype: str = "float32"
+    x_residency: str = "vmem"
+    dimension_semantics: str = "arbitrary"
+
+    def __post_init__(self):
+        if self.rows_per_block % SUBLANE:
+            raise ValueError(f"rows_per_block must be a multiple of {SUBLANE}")
+        if self.nnz_tile % LANE:
+            raise ValueError(f"nnz_tile must be a multiple of {LANE}")
+        if self.nnz_tile % self.unroll:
+            raise ValueError("unroll must divide nnz_tile")
+        if self.accum_dtype not in ACCUM_DTYPE_CHOICES:
+            raise ValueError(f"accum_dtype must be one of {ACCUM_DTYPE_CHOICES}")
+        if self.x_residency not in X_RESIDENCY_CHOICES:
+            raise ValueError(f"x_residency must be one of {X_RESIDENCY_CHOICES}")
+
+    @property
+    def jnp_accum_dtype(self):
+        return jnp.dtype(self.accum_dtype)
+
+    def replace(self, **kw) -> "KernelSchedule":
+        return dataclasses.replace(self, **kw)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+DEFAULT_SCHEDULE = KernelSchedule()
+
+
+def ceil_to(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def pad_axis(a: np.ndarray, axis: int, to: int, fill=0) -> np.ndarray:
+    """Pad ``a`` along ``axis`` up to length ``to`` with ``fill``."""
+    cur = a.shape[axis]
+    if cur >= to:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, to - cur)
+    return np.pad(a, widths, constant_values=fill)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: CSR SpMV (flat COO-tile segmented accumulation).
+
+GPU scalar/vector-CSR does not map onto the TPU's 8x128 vector unit, so the
+CSR kernel is re-thought (DESIGN.md §2): nonzeros are walked in lane-aligned
+flat tiles along a *sequential* grid; each step forms the per-nonzero
+products and scatter-accumulates them into the VMEM-resident output vector
+by row id. Rows straddling a tile boundary are stitched for free because the
+output block persists in VMEM across the sequential grid. Padding nonzeros
+carry ``row_id == n_rows`` and fall into a spill slot that ops.py truncates.
+
+This keeps CSR's no-padding storage property; the price — an in-VMEM
+scatter-add per tile — is exactly the "CSR is hostile to wide SIMD" effect
+the paper observes on GPU (finding 5), now in TPU form.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import KernelSchedule
+
+
+def _csr_kernel(d_ref, c_ref, r_ref, x_ref, y_ref, *, unroll: int, accum_dtype):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    xv = x_ref[...]
+    nt = d_ref.shape[0]
+    step = nt // unroll
+    y = y_ref[...].astype(accum_dtype)
+    for k in range(unroll):
+        sl = slice(k * step, (k + 1) * step)
+        prods = (d_ref[sl].astype(accum_dtype)) * jnp.take(xv, c_ref[sl]).astype(
+            accum_dtype
+        )
+        y = y.at[r_ref[sl]].add(prods)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def csr_spmv_pallas(
+    data: jax.Array,
+    indices: jax.Array,
+    row_ids: jax.Array,
+    x: jax.Array,
+    n_rows: int,
+    schedule: KernelSchedule,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """SpMV over tile-aligned flat CSR/COO arrays.
+
+    ``data/indices/row_ids: (nnz_pad,)`` with ``nnz_pad % nnz_tile == 0``;
+    padding entries must have ``row_ids == n_rows``. Returns ``y: (n_rows+1,)``
+    (last slot = padding spill, truncated by the wrapper).
+    """
+    (nnz_pad,) = data.shape
+    nt = schedule.nnz_tile
+    if nnz_pad % nt:
+        raise ValueError(f"nnz {nnz_pad} not aligned to nnz_tile {nt}")
+    grid = (nnz_pad // nt,)
+    kernel = functools.partial(
+        _csr_kernel, unroll=schedule.unroll, accum_dtype=schedule.jnp_accum_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nt,), lambda i: (i,)),
+            pl.BlockSpec((nt,), lambda i: (i,)),
+            pl.BlockSpec((nt,), lambda i: (i,)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+        ],
+        # whole output vector resident in VMEM across the sequential grid
+        out_specs=pl.BlockSpec((n_rows + 1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_rows + 1,), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),  # carried accumulation => sequential
+        ),
+        interpret=interpret,
+        name="csr_spmv",
+    )(data, indices, row_ids, x)

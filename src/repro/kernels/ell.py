@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: ELL SpMV.
+
+Grid ``(row_blocks, width_tiles)``; each step loads a ``(rows_per_block,
+nnz_tile)`` VMEM tile of the ELL value/column planes, gathers the matching X
+entries from the VMEM-resident dense vector, and accumulates partial row sums
+into the output block (revisited across the width grid axis, so the width
+axis must be 'arbitrary'). ``unroll`` splits the tile into independent
+accumulator chains — the VREG-pressure knob standing in for maxrregcount.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import KernelSchedule
+
+
+def _ell_kernel(d_ref, c_ref, x_ref, y_ref, *, unroll: int, accum_dtype):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    d = d_ref[...]  # (rpb, nt)
+    c = c_ref[...]  # (rpb, nt)
+    xv = x_ref[...]  # (n_cols,)
+    step = d.shape[1] // unroll
+    # independent accumulator chains (ILP / register-pressure analogue)
+    accs = []
+    for k in range(unroll):
+        sl = slice(k * step, (k + 1) * step)
+        dk = d[:, sl].astype(accum_dtype)
+        xk = jnp.take(xv, c[:, sl], axis=0).astype(accum_dtype)
+        accs.append(jnp.sum(dk * xk, axis=1))
+    acc = functools.reduce(jnp.add, accs)
+    y_ref[...] += acc.reshape(y_ref.shape).astype(y_ref.dtype)
+
+
+def ell_spmv_pallas(
+    data: jax.Array,
+    cols: jax.Array,
+    x: jax.Array,
+    schedule: KernelSchedule,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """SpMV over padded ELL planes. Shapes must already be tile-aligned:
+    ``data/cols: (R, W)`` with ``R % rows_per_block == 0`` and
+    ``W % nnz_tile == 0`` (ops.py performs the padding). Returns ``y: (R,)``.
+    """
+    R, W = data.shape
+    rpb, nt = schedule.rows_per_block, schedule.nnz_tile
+    if R % rpb or W % nt:
+        raise ValueError(f"ELL planes ({R},{W}) not aligned to ({rpb},{nt})")
+    grid = (R // rpb, W // nt)
+    kernel = functools.partial(
+        _ell_kernel, unroll=schedule.unroll, accum_dtype=schedule.jnp_accum_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rpb, nt), lambda i, j: (i, j)),
+            pl.BlockSpec((rpb, nt), lambda i, j: (i, j)),
+            pl.BlockSpec(x.shape, lambda i, j: (0,)),  # X resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((rpb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R,), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(schedule.dimension_semantics, "arbitrary"),
+        ),
+        interpret=interpret,
+        name="ell_spmv",
+    )(data, cols, x)
+
+
+def _ell_spmm_kernel(d_ref, c_ref, x_ref, y_ref, *, accum_dtype):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    d = d_ref[...].astype(accum_dtype)  # (rpb, nt)
+    c = c_ref[...]
+    xg = jnp.take(x_ref[...], c, axis=0).astype(accum_dtype)  # (rpb, nt, k)
+    y_ref[...] += jnp.einsum(
+        "rw,rwk->rk", d, xg, preferred_element_type=accum_dtype
+    ).astype(y_ref.dtype)
+
+
+def ell_spmm_pallas(
+    data: jax.Array,
+    cols: jax.Array,
+    X: jax.Array,
+    schedule: KernelSchedule,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """ELL SpMM (dense RHS ``X: (n_cols, k)``) — the MoE-dispatch shape."""
+    R, W = data.shape
+    rpb, nt = schedule.rows_per_block, schedule.nnz_tile
+    if R % rpb or W % nt:
+        raise ValueError(f"ELL planes ({R},{W}) not aligned to ({rpb},{nt})")
+    k = X.shape[1]
+    grid = (R // rpb, W // nt)
+    kernel = functools.partial(_ell_spmm_kernel, accum_dtype=schedule.jnp_accum_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rpb, nt), lambda i, j: (i, j)),
+            pl.BlockSpec((rpb, nt), lambda i, j: (i, j)),
+            pl.BlockSpec(X.shape, lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rpb, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, k), X.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(schedule.dimension_semantics, "arbitrary"),
+        ),
+        interpret=interpret,
+        name="ell_spmm",
+    )(data, cols, X)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The canonical per-format implementations live in ``repro.sparse.spmv``; this
+module re-exports them under the kernels/ contract (every kernel has a
+``ref`` counterpart checked by ``assert_allclose`` in tests) and adds the
+dense ground truth.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.spmv import (  # noqa: F401  (re-exported oracles)
+    spmm_ell,
+    spmv,
+    spmv_bell,
+    spmv_csr,
+    spmv_ell,
+    spmv_sell,
+)
+
+
+def spmv_dense(dense: np.ndarray, x) -> jnp.ndarray:
+    """Ground truth: dense matvec."""
+    return jnp.asarray(np.asarray(dense)) @ jnp.asarray(x)
+
+
+def spmm_dense(dense: np.ndarray, X) -> jnp.ndarray:
+    return jnp.asarray(np.asarray(dense)) @ jnp.asarray(X)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: SELL (sliced-ELL) SpMV over true ragged storage.
+
+Slices are stored column-major (formats.py), so width-tile ``j`` of slice
+``s`` is the contiguous chunk ``[slice_ptr[s] + j*nnz_tile*C, +nnz_tile*C)``
+— addressable by a flat BlockSpec whose index is computed from the
+scalar-prefetched slice pointers. Raggedness is handled two ways at once:
+
+* the *data movement* of out-of-range tiles is aliased to the slice's last
+  valid tile (already VMEM-resident, so the re-DMA is free), and
+* the *compute* of out-of-range tiles is masked off with ``pl.when``.
+
+This is the SELL-C-sigma -> TPU adaptation: storage stays ragged (the whole
+point of SELL), while every DMA stays tile-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import KernelSchedule
+
+
+def _sell_kernel(
+    tptr_ref, wt_ref, d_ref, c_ref, x_ref, y_ref, *, C: int, unroll: int, accum_dtype
+):
+    del tptr_ref  # consumed by the index maps
+    s, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(j < wt_ref[s])
+    def _compute():
+        nt = d_ref.shape[0] // C
+        d = d_ref[...].reshape(nt, C)
+        c = c_ref[...].reshape(nt, C)
+        xv = x_ref[...]
+        step = nt // unroll
+        acc = jnp.zeros((C,), accum_dtype)
+        for k in range(unroll):
+            sl = slice(k * step, (k + 1) * step)
+            dk = d[sl].astype(accum_dtype)
+            xk = jnp.take(xv, c[sl], axis=0).astype(accum_dtype)
+            acc = acc + jnp.sum(dk * xk, axis=0)
+        y_ref[...] += acc.reshape(y_ref.shape).astype(y_ref.dtype)
+
+
+def sell_spmv_pallas(
+    data: jax.Array,
+    cols: jax.Array,
+    tile_ptr: jax.Array,
+    width_tiles: jax.Array,
+    x: jax.Array,
+    n_slices: int,
+    C: int,
+    max_width_tiles: int,
+    schedule: KernelSchedule,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """SpMV over flat SELL storage.
+
+    ``data/cols: (total,)`` column-major ragged slices; ``tile_ptr[s]`` =
+    ``slice_ptr[s] / (nnz_tile*C)`` (must divide exactly — ops.py re-pads
+    widths when the schedule's nnz_tile exceeds the storage quantum);
+    ``width_tiles[s]`` = stored width of slice s in nnz_tile units. Returns
+    ``y: (n_slices, C)``.
+    """
+    nt = schedule.nnz_tile
+    blk = nt * C
+    if data.shape[0] % blk:
+        raise ValueError(f"SELL storage {data.shape[0]} not aligned to {blk}")
+    grid = (n_slices, max_width_tiles)
+    kernel = functools.partial(
+        _sell_kernel, C=C, unroll=schedule.unroll, accum_dtype=schedule.jnp_accum_dtype
+    )
+
+    def _tile_idx(s, j, tptr, wt):
+        return (tptr[s] + jnp.minimum(j, wt[s] - 1),)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk,), _tile_idx),
+            pl.BlockSpec((blk,), _tile_idx),
+            pl.BlockSpec(x.shape, lambda s, j, tptr, wt: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, C), lambda s, j, tptr, wt: (s, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_slices, C), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(schedule.dimension_semantics, "arbitrary"),
+        ),
+        interpret=interpret,
+        name="sell_spmv",
+    )(tile_ptr, width_tiles, data, cols, x)

@@ -1,0 +1,280 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x workload shape x mesh) cell:
+
+1. **Proof + memory pass** — lower the full-depth (scan-over-layers) step
+   with explicit in/out shardings, ``.lower().compile()``, print
+   ``memory_analysis()`` / ``cost_analysis()``. A failure here (sharding
+   mismatch, OOM at compile, unsupported collective) is a bug in the
+   framework, not in the cell.
+2. **Cost pass** — XLA's cost analysis counts loop bodies once, so exact
+   FLOP/byte/collective numbers come from two *unrolled* lowerings at 1 and
+   2 pattern repetitions, extrapolated linearly to the full depth (exact:
+   step cost is affine in depth).
+3. **Roofline terms** — compute / memory / collective seconds per §Roofline
+   (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI), dominant
+   term, MODEL_FLOPS/HLO_FLOPs utilization ratio.
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` and feed
+EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline.py.
+
+NOTE: the XLA_FLAGS line above MUST run before any jax import — jax locks
+the device count on first init. Do not set this flag globally.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import batch_sharding, build_sharding
+from repro.launch.hlo_analysis import parse_collectives, summarize_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import abstract_opt_state, make_step_fn, model_flops
+from repro.models import cache_specs, model_specs
+from repro.utils.logging import get_logger
+
+log = get_logger("dryrun")
+
+# assignment §Roofline hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def _shardings_for(cfg: ModelConfig, shape, mesh, args, rules=None):
+    """in/out shardings matching make_step_fn's argument pytree."""
+    pspecs = model_specs(cfg)
+    param_sh = build_sharding(mesh, pspecs, rules)
+    if shape.kind == "train":
+        from repro.models.param import is_spec
+
+        mv_sh = jax.tree.map(lambda s: s, param_sh)
+        opt_sh = {
+            "m": mv_sh,
+            "v": jax.tree.map(lambda s: s, param_sh),
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+        batch_sh = batch_sharding(mesh, args[2])
+        return (param_sh, opt_sh, batch_sh), (param_sh, opt_sh, None)
+    cache_sh = build_sharding(mesh, cache_specs(cfg, shape.global_batch, shape.seq_len), rules)
+    if shape.kind == "prefill":
+        in_sh = (param_sh, cache_sh, batch_sharding(mesh, args[2]))
+        return in_sh, (None, cache_sh)
+    # decode
+    tok_sh = batch_sharding(mesh, {"t": args[2]})["t"]
+    pos_sh = batch_sharding(mesh, {"p": args[3]})["p"]
+    return (param_sh, cache_sh, tok_sh, pos_sh), (None, cache_sh)
+
+
+def _depth_config(cfg: ModelConfig, reps: int) -> ModelConfig:
+    n = len(cfg.first_blocks) + len(cfg.pattern) * reps + len(cfg.tail_blocks)
+    return cfg.replace(n_layers=n)
+
+
+def _lower_compile(cfg, shape, mesh, *, unroll: bool, rules=None):
+    from repro.dist.partition import sharding_context
+
+    step, args = make_step_fn(cfg, shape, unroll=unroll)
+    in_sh, out_sh = _shardings_for(cfg, shape, mesh, args, rules)
+    t0 = time.time()
+    with mesh, sharding_context(mesh, rules):
+        lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+        compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             dispatch_format: str | None = None, tag: str = "",
+             rules_name: str = "train") -> dict:
+    cfg = get_config(arch)
+    if dispatch_format and cfg.n_experts:
+        cfg = cfg.replace(dispatch_format=dispatch_format)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    ok, reason = applicable(cfg, shape_name)
+    artifact: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": [2, 16, 16] if multi_pod else [16, 16],
+        "n_chips": 512 if multi_pod else 256,
+        "tag": tag,
+    }
+    out_path = out_dir / f"{cell}.json"
+    if not ok:
+        artifact["skipped"] = reason
+        out_path.write_text(json.dumps(artifact, indent=1))
+        log.info("SKIP %s: %s", cell, reason)
+        return artifact
+
+    from repro.dist.sharding import RULE_SETS
+
+    rules = RULE_SETS[rules_name]
+    artifact["rules"] = rules_name
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = artifact["n_chips"]
+
+    # ---- 1) full-depth proof + memory pass --------------------------------
+    compiled, dt = _lower_compile(cfg, shape, mesh, unroll=False, rules=rules)
+    ma = compiled.memory_analysis()
+    print(f"[{cell}] memory_analysis:", ma)
+    ca_raw = compiled.cost_analysis()
+    print(f"[{cell}] cost_analysis (scan-rolled, loop bodies counted once):",
+          {k: ca_raw.get(k) for k in ("flops", "bytes accessed")})
+    artifact["compile_s_full"] = round(dt, 2)
+    artifact["memory"] = {
+        "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+        "output_bytes_per_device": int(ma.output_size_in_bytes),
+        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    artifact["hbm_per_device_gb"] = round(
+        (ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes)
+        / 2**30,
+        3,
+    )
+
+    # ---- 2) cost pass: unrolled depth-1 / depth-2, linear extrapolation ----
+    costs = {}
+    for reps in (1, 2):
+        cfg_g = _depth_config(cfg, reps)
+        comp_g, dt_g = _lower_compile(cfg_g, shape, mesh, unroll=True, rules=rules)
+        ca = comp_g.cost_analysis()
+        coll = summarize_collectives(parse_collectives(comp_g.as_text()))
+        costs[reps] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll_operand": float(coll["operand_bytes"]),
+            "coll_ring": float(coll["ring_link_bytes"]),
+            "coll_by_kind": coll["by_kind"],
+            "compile_s": round(dt_g, 2),
+        }
+    G = cfg.n_groups
+    def extrap(key):
+        c1, c2 = costs[1][key], costs[2][key]
+        return c1 + (G - 1) * (c2 - c1)
+
+    flops_dev = extrap("flops")
+    bytes_dev = extrap("bytes")
+    coll_operand_dev = extrap("coll_operand")
+    coll_ring_dev = extrap("coll_ring")
+    artifact["cost_pass"] = {
+        "per_rep": {str(k): {kk: vv for kk, vv in v.items() if kk != "coll_by_kind"}
+                    for k, v in costs.items()},
+        "collectives_by_kind_rep2": {
+            k: {"count": v["count"], "operand_bytes": int(v["operand_bytes"])}
+            for k, v in costs[2]["coll_by_kind"].items()
+        },
+        "extrapolated_per_device": {
+            "flops": flops_dev,
+            "bytes": bytes_dev,
+            "collective_operand_bytes": coll_operand_dev,
+            "collective_ring_link_bytes": coll_ring_dev,
+        },
+    }
+
+    # ---- 3) roofline terms -------------------------------------------------
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_operand_dev / ICI_BW  # assignment formula
+    collective_ring_s = coll_ring_dev / ICI_BW  # ring-schedule refinement
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = flops_dev * n_chips
+    artifact["roofline"] = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "collective_ring_s": collective_ring_s,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": mf / hlo_flops_global if hlo_flops_global else 0.0,
+        "step_time_lower_bound_s": max(terms.values()),
+        "roofline_fraction": (mf / n_chips / PEAK_FLOPS) / max(max(terms.values()), 1e-30),
+    }
+    out_path.write_text(json.dumps(artifact, indent=1))
+    log.info(
+        "%s: dominant=%s compute=%.3gs memory=%.3gs coll=%.3gs useful=%.2f%% roofline=%.1f%%",
+        cell, dominant, compute_s, memory_s, collective_s,
+        100 * artifact["roofline"]["useful_flops_ratio"],
+        100 * artifact["roofline"]["roofline_fraction"],
+    )
+    return artifact
+
+
+def _iter_cells(archs, shapes, meshes):
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                yield arch, shape, mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod1", "pod2", "both"], default="both")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--all", action="store_true", help="run every cell in subprocesses")
+    ap.add_argument("--dispatch-format", default=None, help="MoE dispatch override")
+    ap.add_argument("--tag", default="", help="artifact suffix for perf experiments")
+    ap.add_argument("--rules", default="train", choices=["train", "serve", "train_sp"],
+                    help="sharding rule set (serve = TP-only weights)")
+    args = ap.parse_args(argv)
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        archs = [args.arch] if args.arch else list(ARCH_IDS)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        failures = []
+        for arch, shape, mp in _iter_cells(archs, shapes, meshes):
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape,
+                "--mesh", "pod2" if mp else "pod1", "--out", str(out_dir),
+            ]
+            if args.dispatch_format:
+                cmd += ["--dispatch-format", args.dispatch_format]
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                failures.append((arch, shape, mp))
+                log.error("FAILED %s %s %s:\n%s", arch, shape, mp, r.stderr[-2000:])
+            else:
+                log.info("ok %s %s %s", arch, shape, "pod2" if mp else "pod1")
+        if failures:
+            log.error("%d cells failed: %s", len(failures), failures)
+            sys.exit(1)
+        log.info("all cells passed")
+        return
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    for mp in meshes:
+        try:
+            run_cell(args.arch, args.shape, mp, out_dir,
+                     dispatch_format=args.dispatch_format, tag=args.tag,
+                     rules_name=args.rules)
+        except Exception:
+            traceback.print_exc()
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

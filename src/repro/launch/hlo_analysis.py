@@ -1,0 +1,106 @@
+"""Post-SPMD HLO analysis: collective-traffic extraction.
+
+``cost_analysis()`` has no collective accounting, so the dry-run parses the
+compiled per-device HLO text and sums operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (assignment
+formula), plus a ring-model estimate of actual per-device link bytes.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+# `%name = bf16[8,128]{1,0} all-gather(...)` — result type then op
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^\s]*\s*(?:,\s*[a-z0-9]+\[[^\]]*\][^\s]*\s*)*(?:\))?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(?:-start)?\("
+)
+_GROUPS_LITERAL_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    dtype: str
+    result_bytes: int
+    operand_bytes: int
+    group_size: int
+
+    @property
+    def ring_link_bytes(self) -> float:
+        """Per-device bytes on the busiest link under a ring schedule."""
+        g, n = self.group_size, self.operand_bytes
+        if g <= 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * n * (g - 1) / g
+        if self.kind == "all-gather":
+            return float(n) * (g - 1)
+        if self.kind == "reduce-scatter":
+            return n * (g - 1) / g
+        if self.kind == "all-to-all":
+            return n * (g - 1) / g
+        return float(n)  # collective-permute
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        result_bytes = _shape_bytes(dtype, dims)
+        g = 1
+        lit = _GROUPS_LITERAL_RE.search(line)
+        if lit:
+            g = len([x for x in lit.group(1).split(",") if x.strip()])
+        else:
+            iota = _GROUPS_IOTA_RE.search(line)
+            if iota:
+                g = int(iota.group(2))
+        if kind == "all-gather":
+            operand = result_bytes // max(g, 1)
+        elif kind == "reduce-scatter":
+            operand = result_bytes * g
+        else:
+            operand = result_bytes
+        ops.append(CollectiveOp(kind, dtype, result_bytes, operand, g))
+    return ops
+
+
+def summarize_collectives(ops: list[CollectiveOp]) -> dict:
+    by_kind: dict[str, dict] = defaultdict(lambda: {"count": 0, "operand_bytes": 0, "ring_link_bytes": 0.0})
+    for op in ops:
+        s = by_kind[op.kind]
+        s["count"] += 1
+        s["operand_bytes"] += op.operand_bytes
+        s["ring_link_bytes"] += op.ring_link_bytes
+    total_operand = sum(s["operand_bytes"] for s in by_kind.values())
+    total_ring = sum(s["ring_link_bytes"] for s in by_kind.values())
+    return {
+        "by_kind": dict(by_kind),
+        "operand_bytes": total_operand,
+        "ring_link_bytes": total_ring,
+        "n_ops": sum(s["count"] for s in by_kind.values()),
+    }

@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. The dry-run driver forces 512 placeholder host
+devices before any jax import; everything else sees the real device count.
+
+Recommended XLA flags for real TPU fleets (documented here, applied by the
+launch CLIs via REPRO_XLA_PERF_FLAGS=1):
+
+  --xla_tpu_enable_latency_hiding_scheduler=true   overlap collectives with
+                                                   compute (DESIGN.md §6)
+  --xla_tpu_enable_async_collective_fusion=true
+  --xla_tpu_overlap_compute_collective_tc=true
+"""
+
+from __future__ import annotations
+
+import jax
+
+PERF_XLA_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_overlap_compute_collective_tc=true"
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)}; the dry-run "
+            "driver must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import"
+        )
+    dev_grid = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_grid, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the real local device (examples / tests)."""
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

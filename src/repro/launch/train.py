@@ -1,0 +1,109 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [options]``.
+
+On this CPU container it runs reduced configs on a 1x1 mesh; on a real fleet
+the same code paths run the full config on the production mesh (the
+``--production-mesh`` flag lowers against ``make_production_mesh()``; it
+requires 256/512 devices and is exercised by the dry-run driver instead).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import DataConfig
+from repro.dist.partition import sharding_context
+from repro.dist.sharding import batch_sharding, build_sharding
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model_specs
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.train import TrainConfig, Trainer, make_train_step
+from repro.train.trainer import init_train_state
+from repro.utils.logging import get_logger
+
+log = get_logger("launch.train")
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=sorted(ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the reduced (CPU-scale) config [default]")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-frac", type=float, default=0.0)
+    ap.add_argument("--dispatch-format", default=None,
+                    help="MoE dispatch: ell|sell|dense (Auto-SpMV run-time knob)")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    cfg = get_config(args.arch, reduced_config=args.reduced)
+    if args.dispatch_format and cfg.n_experts:
+        cfg = cfg.replace(dispatch_format=args.dispatch_format)
+    mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
+    log.info("arch=%s mesh=%s params~%.1fM", cfg.name, dict(mesh.shape),
+             cfg.param_counts()["total"] / 1e6)
+
+    opt_cfg = AdamWConfig(
+        learning_rate=cosine_schedule(args.lr, args.warmup, args.steps),
+        state_dtype=cfg.opt_state_dtype,
+    )
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=args.seq_len,
+        global_batch=args.batch,
+        seed=args.seed,
+        embed_dim=cfg.d_model if cfg.train_input == "embeds" or cfg.prefix_len else 0,
+        prefix_len=cfg.prefix_len,
+    )
+    train_cfg = TrainConfig(
+        steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        compress_frac=args.compress_frac,
+    )
+
+    param_sh = build_sharding(mesh, model_specs(cfg))
+    import jax.numpy as jnp
+
+    def to_device(batch):
+        spec = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+        sh = batch_sharding(mesh, spec)
+        out = {}
+        for k, v in batch.items():
+            arr = v
+            if k == "embeds" or k == "prefix_embeds":
+                arr = arr.astype(jnp.dtype(cfg.compute_dtype))
+            out[k] = jax.device_put(arr, sh[k])
+        return out
+
+    with mesh, sharding_context(mesh):
+        step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, compress_frac=train_cfg.compress_frac)
+        )
+        trainer = Trainer(cfg, data_cfg, opt_cfg, train_cfg,
+                          jit_step=step_fn, to_device=to_device)
+        params, opt_state = init_train_state(
+            cfg, opt_cfg, seed=args.seed, compress_frac=train_cfg.compress_frac
+        )
+        params, opt_state = trainer.run(params, opt_state)
+    if trainer.history:
+        first, last = trainer.history[0]["loss"], trainer.history[-1]["loss"]
+        log.info("done: loss %.4f -> %.4f over %d steps", first, last, len(trainer.history))
+    return trainer
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+from repro.models.model import (
+    block_specs,
+    cache_specs,
+    decode_step,
+    forward,
+    model_specs,
+    prefill,
+)
+from repro.models.param import (
+    ParamSpec,
+    abstract_params,
+    axes_tree,
+    init_params,
+    param_count,
+    stack_specs,
+)
+
+__all__ = [
+    "block_specs",
+    "cache_specs",
+    "decode_step",
+    "forward",
+    "model_specs",
+    "prefill",
+    "ParamSpec",
+    "abstract_params",
+    "axes_tree",
+    "init_params",
+    "param_count",
+    "stack_specs",
+]

@@ -1,0 +1,250 @@
+"""Shared transformer layers: RMSNorm, RoPE, chunked-flash GQA attention,
+gated FFNs. Pure functions over param pytrees (models/param.py).
+
+Attention is implemented flash-style in jnp: the KV axis is processed in
+chunks with a running (max, denominator, accumulator) carry, bounding the
+transient to S*chunk instead of S^2 — required for the 32k prefill cells.
+``unroll=True`` fully unrolls the chunk scan so XLA cost analysis counts
+every chunk (the dry-run's cost-accurate lowering; DESIGN.md roofline notes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.partition import hint
+from repro.models.param import ParamSpec
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), (None,), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, T, H, dh); positions: (B, T) or (1, T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------- flash attention
+def _mask(q_pos, kv_pos, kv_valid, *, window: int, prefix_len: int):
+    """(B, Tq, C) boolean mask from positions.
+
+    causal always; ``window`` > 0 limits lookback; ``prefix_len`` > 0 makes
+    keys inside the prefix visible to every query (prefix-LM)."""
+    qp = q_pos[:, :, None]  # (B, Tq, 1)
+    kp = kv_pos[:, None, :]  # (B, 1, C)
+    ok = kp <= qp
+    if window > 0:
+        ok &= kp > qp - window
+    if prefix_len > 0:
+        ok |= kp < prefix_len
+    return ok & kv_valid[:, None, :]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    kv_valid: jax.Array,
+    window: int = 0,
+    prefix_len: int = 0,
+    chunk: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """q: (B,Tq,H,dh); k/v: (B,S,H,dh) (kv heads already repeated to H).
+    Returns (B,Tq,H,dh)."""
+    B, Tq, H, dh = q.shape
+    S = k.shape[1]
+    scale = dh**-0.5
+    qf = q.astype(jnp.float32) * scale
+
+    if Tq == 1 or S <= chunk:
+        # single-block path (decode, short sequences): no scan needed
+        scores = jnp.einsum(
+            "bqhd,bkhd->bhqk", qf, k.astype(jnp.float32)
+        )
+        m = _mask(q_pos, kv_pos, kv_valid, window=window, prefix_len=prefix_len)
+        scores = hint(
+            jnp.where(m[:, None, :, :], scores, NEG_INF),
+            ("batch", "heads", None, None),
+        )
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    if S % chunk:
+        # pad the KV axis to the chunk quantum; padded slots are invalid
+        pad = chunk - S % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)))
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+        S += pad
+    nc = S // chunk
+    ks = k.reshape(B, nc, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    kps = kv_pos.reshape(B, nc, chunk).transpose(1, 0, 2)
+    kvs = kv_valid.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        k_c, v_c, kp_c, kv_c = xs
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qf, k_c.astype(jnp.float32))
+        msk = _mask(q_pos, kp_c, kv_c, window=window, prefix_len=prefix_len)
+        scores = hint(
+            jnp.where(msk[:, None, :, :], scores, NEG_INF),
+            ("batch", "heads", None, None),
+        )
+        m_new = jnp.maximum(m_run, scores.max(axis=-1))
+        p = jnp.where(msk[:, None, :, :], jnp.exp(scores - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_c.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((B, H, Tq), NEG_INF, jnp.float32),
+        jnp.zeros((B, H, Tq), jnp.float32),
+        jnp.zeros((B, H, Tq, dh), jnp.float32),
+    )
+    (m_run, l_run, acc), _ = jax.lax.scan(
+        body, init, (ks, vs, kps, kvs), unroll=nc if unroll else 1
+    )
+    out = jnp.where(l_run[..., None] > 0, acc / jnp.maximum(l_run[..., None], 1e-30), 0.0)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Tq,H,dh)
+
+
+# ------------------------------------------------------------- GQA attention
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", None)),
+        "wk": ParamSpec((d, kv, dh), ("embed", "kv", None)),
+        "wv": ParamSpec((d, kv, dh), ("embed", "kv", None)),
+        "wo": ParamSpec((h, dh, d), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = rmsnorm_spec(dh)
+        specs["k_norm"] = rmsnorm_spec(dh)
+    return specs
+
+
+def attention(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: dict | None = None,
+    window: int = 0,
+    unroll: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    """x: (B, T, D); positions: (B, T). With ``cache`` (decode), writes the
+    new K/V at ``positions`` and attends over the cache."""
+    B, T, D = x.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(cd))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(cd))
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        kv_pos = positions
+        kv_valid = jnp.ones((B, T), bool)
+        k_all, v_all = k, v
+        new_cache = None
+    else:
+        # scatter this step's K/V into the cache at `positions`
+        S = cache["k"].shape[1]
+        b_idx = jnp.arange(B)[:, None]
+        k_all = cache["k"].at[b_idx, positions].set(k.astype(cache["k"].dtype))
+        v_all = cache["v"].at[b_idx, positions].set(v.astype(cache["v"].dtype))
+        new_cache = {"k": k_all, "v": v_all}
+        kv_pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        kv_valid = kv_pos <= positions[:, -1:]
+        k_all = k_all.astype(cd)
+        v_all = v_all.astype(cd)
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if n_rep > 1:
+        # kv-repeat to the full head count; pin the result to the model axis
+        # (kv alone may not divide tp; the repeated dim does)
+        k_all = hint(jnp.repeat(k_all, n_rep, axis=2), ("batch", None, "heads", None))
+        v_all = hint(jnp.repeat(v_all, n_rep, axis=2), ("batch", None, "heads", None))
+
+    out = flash_attention(
+        q,
+        k_all,
+        v_all,
+        q_pos=positions,
+        kv_pos=kv_pos,
+        kv_valid=kv_valid,
+        window=window,
+        prefix_len=cfg.prefix_len if cfg.prefix_lm else 0,
+        chunk=cfg.attn_chunk,
+        unroll=unroll,
+    )
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(cd))
+    return y, new_cache
+
+
+def attention_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    spec = ParamSpec((batch, max_len, kv, dh), ("batch", "kv_seq", "kv", None), init="zeros")
+    return {"k": spec, "v": spec}
+
+
+# ------------------------------------------------------------------ MLP / FFN
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff if d_ff is not None else cfg.d_ff
+    if cfg.mlp_kind == "gelu":
+        return {
+            "w_up": ParamSpec((d, f), ("embed", "ffn")),
+            "w_down": ParamSpec((f, d), ("ffn", "embed")),
+        }
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "ffn")),
+        "w_up": ParamSpec((d, f), ("embed", "ffn")),
+        "w_down": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.mlp_kind == "gelu":
+        h = jax.nn.gelu(jnp.einsum("btd,df->btf", x, params["w_up"].astype(cd)))
+        return jnp.einsum("btf,fd->btd", h, params["w_down"].astype(cd))
+    act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+    g = act(jnp.einsum("btd,df->btf", x, params["w_gate"].astype(cd)))
+    u = jnp.einsum("btd,df->btf", x, params["w_up"].astype(cd))
+    return jnp.einsum("btf,fd->btd", g * u, params["w_down"].astype(cd))

@@ -1,0 +1,426 @@
+"""Decoder-only LM assembly over the block vocabulary.
+
+Layer layout = optional ``first_blocks`` (unrolled) + ``pattern`` repeated
+``n_groups`` times (jax.lax.scan over stacked params — keeps HLO size O(1)
+in depth; a 61-layer 1T-param model lowers in seconds) + ``tail_blocks``
+(unrolled remainder). ``unroll_layers=True`` unrolls the group scan for the
+dry-run's cost-accurate lowering (launch/dryrun.py lowers depth 1 and 2 and
+extrapolates — exact for depth-linear costs).
+
+Three entry points: ``forward`` (train, no cache), ``prefill`` (fills the
+serving cache over a full prompt) and ``decode_step`` (one token).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.partition import hint
+from repro.models.layers import (
+    attention,
+    attention_cache_spec,
+    attention_specs,
+    mlp,
+    mlp_specs,
+    rmsnorm,
+    rmsnorm_spec,
+)
+from repro.models.moe import moe_ffn, moe_specs
+from repro.models.param import ParamSpec, stack_specs
+from repro.models.recurrent import (
+    mlstm_block,
+    mlstm_cache_spec,
+    mlstm_specs,
+    rglru,
+    rglru_cache_spec,
+    rglru_specs,
+    slstm_block,
+    slstm_cache_spec,
+    slstm_specs,
+)
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+
+def block_specs(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    if kind in ("attn", "local"):
+        return {
+            "ln1": rmsnorm_spec(d),
+            "attn": attention_specs(cfg),
+            "ln2": rmsnorm_spec(d),
+            "mlp": mlp_specs(cfg),
+        }
+    if kind == "moe":
+        return {
+            "ln1": rmsnorm_spec(d),
+            "attn": attention_specs(cfg),
+            "ln2": rmsnorm_spec(d),
+            "moe": moe_specs(cfg),
+        }
+    if kind == "rec":
+        return {
+            "ln1": rmsnorm_spec(d),
+            "rec": rglru_specs(cfg),
+            "ln2": rmsnorm_spec(d),
+            "mlp": mlp_specs(cfg),
+        }
+    if kind == "mlstm":
+        return mlstm_specs(cfg)
+    if kind == "slstm":
+        return slstm_specs(cfg)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), scale=1.0),
+        "head": tuple(block_specs(cfg, k) for k in cfg.first_blocks),
+        "groups": tuple(
+            stack_specs(block_specs(cfg, k), cfg.n_groups) for k in cfg.pattern
+        )
+        if cfg.n_groups
+        else (),
+        "tail": tuple(block_specs(cfg, k) for k in cfg.tail_blocks),
+        "final_norm": rmsnorm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    return specs
+
+
+def block_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "moe"):
+        return attention_cache_spec(cfg, batch, max_len)
+    if kind == "local":
+        w = min(cfg.window, max_len)
+        spec = attention_cache_spec(cfg, batch, w)
+        spec["pos"] = ParamSpec((batch, w), ("batch", None), init="zeros", dtype="int32")
+        return spec
+    if kind == "rec":
+        return rglru_cache_spec(cfg, batch)
+    if kind == "mlstm":
+        return mlstm_cache_spec(cfg, batch)
+    if kind == "slstm":
+        return slstm_cache_spec(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Materialize a fresh serving cache with correct initial values (e.g.
+    the sLSTM normalizer starts at ones, attention K/V at zeros)."""
+    from repro.models.param import init_params
+
+    return init_params(cache_specs(cfg, batch, max_len), jax.random.PRNGKey(0), "float32")
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return {
+        "head": tuple(block_cache_spec(cfg, k, batch, max_len) for k in cfg.first_blocks),
+        "groups": tuple(
+            stack_specs(block_cache_spec(cfg, k, batch, max_len), cfg.n_groups)
+            for k in cfg.pattern
+        )
+        if cfg.n_groups
+        else (),
+        "tail": tuple(block_cache_spec(cfg, k, batch, max_len) for k in cfg.tail_blocks),
+    }
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _local_attention(params, x, cfg, *, positions, cache, unroll):
+    """Windowed attention; ring cache of width W on the serve path."""
+    if cache is None:
+        y, _ = attention(
+            params, x, cfg, positions=positions, cache=None, window=cfg.window, unroll=unroll
+        )
+        return y, None
+    # ring cache: keep the last W tokens' K/V with absolute positions
+    from repro.models.layers import flash_attention, rope
+
+    B, T, D = x.shape
+    W = cache["k"].shape[1]
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(cd))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(cd))
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    keep = min(W, T)
+    slots = positions[:, -keep:] % W
+    b_idx = jnp.arange(B)[:, None]
+    k_all = cache["k"].at[b_idx, slots].set(k[:, -keep:].astype(cache["k"].dtype))
+    v_all = cache["v"].at[b_idx, slots].set(v[:, -keep:].astype(cache["v"].dtype))
+    pos_all = cache["pos"].at[b_idx, slots].set(positions[:, -keep:].astype(jnp.int32) + 1)
+    new_cache = {"k": k_all, "v": v_all, "pos": pos_all}
+    if T > 1:
+        # prefill: attend within the prompt itself (windowed)
+        y, _ = attention(
+            params, x, cfg, positions=positions, cache=None, window=cfg.window, unroll=unroll
+        )
+        return y, new_cache
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kr = jnp.repeat(k_all.astype(cd), n_rep, axis=2) if n_rep > 1 else k_all.astype(cd)
+    vr = jnp.repeat(v_all.astype(cd), n_rep, axis=2) if n_rep > 1 else v_all.astype(cd)
+    out = flash_attention(
+        q,
+        kr,
+        vr,
+        q_pos=positions,
+        kv_pos=pos_all - 1,
+        kv_valid=pos_all > 0,
+        window=cfg.window,
+        chunk=cfg.attn_chunk,
+    )
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(cd))
+    return y, new_cache
+
+
+def _rglru_with_state(params, x, cfg, *, cache):
+    """RG-LRU supporting prefill (T>1 with carried state)."""
+    if cache is None or x.shape[1] == 1:
+        return rglru(params, x, cfg, cache=cache)
+    # prefill: fold the initial state into the first step, keep final state
+    from repro.models.recurrent import _causal_conv1d, _lru_gates
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    xb = jnp.einsum("btd,dr->btr", x, params["w_in"].astype(cd))
+    gb = jnp.einsum("btd,dr->btr", x, params["w_gate"].astype(cd))
+    xc, new_conv = _causal_conv1d(
+        xb, params["conv_w"].astype(cd), params["conv_b"].astype(cd), cache["conv"]
+    )
+    a, bx = _lru_gates(params, xc, cfg)
+    bx = bx.at[:, 0].add(a[:, 0] * cache["h"].astype(jnp.float32))
+
+    def combine(u, v_):
+        a1, b1 = u
+        a2, b2 = v_
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    y = (h.astype(cd) * jax.nn.gelu(gb)).astype(cd)
+    out = jnp.einsum("btr,rd->btd", y, params["w_out"].astype(cd))
+    return out, {"h": h[:, -1], "conv": new_conv}
+
+
+def apply_block(
+    kind: str,
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: dict | None,
+    unroll_attn: bool = False,
+):
+    """Returns (x, new_cache, (moe_aux, tokens_per_expert))."""
+    zero_aux = (jnp.zeros((), jnp.float32), jnp.zeros((max(cfg.n_experts, 1),), jnp.float32))
+    if kind in ("attn", "moe"):
+        a, new_cache = attention(
+            params["attn"],
+            rmsnorm(x, params["ln1"]),
+            cfg,
+            positions=positions,
+            cache=cache,
+            window=0,
+            unroll=unroll_attn,
+        )
+        x = x + a
+        h = rmsnorm(x, params["ln2"])
+        if kind == "moe":
+            y, aux, counts = moe_ffn(params["moe"], h, cfg)
+            return x + y, new_cache, (aux, counts)
+        return x + mlp(params["mlp"], h, cfg), new_cache, zero_aux
+    if kind == "local":
+        a, new_cache = _local_attention(
+            params["attn"],
+            rmsnorm(x, params["ln1"]),
+            cfg,
+            positions=positions,
+            cache=cache,
+            unroll=unroll_attn,
+        )
+        x = x + a
+        return x + mlp(params["mlp"], rmsnorm(x, params["ln2"]), cfg), new_cache, zero_aux
+    if kind == "rec":
+        r, new_cache = _rglru_with_state(params["rec"], rmsnorm(x, params["ln1"]), cfg, cache=cache)
+        x = x + r
+        return x + mlp(params["mlp"], rmsnorm(x, params["ln2"]), cfg), new_cache, zero_aux
+    if kind == "mlstm":
+        x, new_cache = mlstm_block(params, x, cfg, cache=cache)
+        return x, new_cache, zero_aux
+    if kind == "slstm":
+        x, new_cache = slstm_block(params, x, cfg, cache=cache)
+        return x, new_cache, zero_aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg, tokens=None, embeds=None, prefix_embeds=None):
+    cd = jnp.dtype(cfg.compute_dtype)
+    if embeds is not None:
+        x = embeds.astype(cd)
+    else:
+        x = params["embed"][tokens].astype(cd)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cd), x], axis=1)
+    return hint(x, ("batch", "seq", None))
+
+
+def _logits(params, cfg, x):
+    h = rmsnorm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", h, params["embed"].astype(h.dtype))
+    else:
+        logits = jnp.einsum("btd,dv->btv", h, params["lm_head"].astype(h.dtype))
+    logits = hint(logits.astype(jnp.float32), ("batch", None, "vocab"))
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def _run_blocks(params, cfg, x, *, positions, cache, unroll_attn, unroll_layers):
+    aux_l = jnp.zeros((), jnp.float32)
+    aux_c = jnp.zeros((max(cfg.n_experts, 1),), jnp.float32)
+    new_cache: dict[str, Any] = {"head": [], "groups": [], "tail": []}
+
+    def run_list(kinds, plist, clist, x, aux_l, aux_c, out_key):
+        for kind, p, c in zip(kinds, plist, clist):
+            x, nc, (al, ac) = apply_block(
+                kind, p, x, cfg, positions=positions, cache=c, unroll_attn=unroll_attn
+            )
+            aux_l, aux_c = aux_l + al, aux_c + ac
+            new_cache[out_key].append(nc)
+        return x, aux_l, aux_c
+
+    head_caches = cache["head"] if cache else [None] * len(cfg.first_blocks)
+    x, aux_l, aux_c = run_list(cfg.first_blocks, params["head"], head_caches, x, aux_l, aux_c, "head")
+
+    for pi, kind in enumerate(cfg.pattern if cfg.n_groups else ()):
+        pstack = params["groups"][pi]
+        cstack = cache["groups"][pi] if cache else None
+
+        def group_fn(carry, xs, kind=kind):
+            xx, al, ac = carry
+            p, c = xs
+            xx, nc, (dl, dc) = apply_block(
+                kind, p, xx, cfg, positions=positions, cache=c, unroll_attn=unroll_attn
+            )
+            xx = hint(xx, ("batch", "seq", None))
+            return (xx, al + dl, ac + dc), nc
+
+        body = jax.checkpoint(group_fn) if cfg.remat else group_fn
+        if unroll_layers:
+            ncs = []
+            for g in range(cfg.n_groups):
+                p_g = jax.tree.map(lambda a: a[g], pstack)
+                c_g = jax.tree.map(lambda a: a[g], cstack) if cstack is not None else None
+                (x, aux_l, aux_c), nc = body((x, aux_l, aux_c), (p_g, c_g))
+                ncs.append(nc)
+            nc_stacked = (
+                jax.tree.map(lambda *a: jnp.stack(a), *ncs) if cache else None
+            )
+        else:
+            (x, aux_l, aux_c), nc_stacked = jax.lax.scan(
+                body, (x, aux_l, aux_c), (pstack, cstack)
+            )
+        new_cache["groups"].append(nc_stacked)
+
+    tail_caches = cache["tail"] if cache else [None] * len(cfg.tail_blocks)
+    x, aux_l, aux_c = run_list(cfg.tail_blocks, params["tail"], tail_caches, x, aux_l, aux_c, "tail")
+
+    out_cache = (
+        {
+            "head": tuple(new_cache["head"]),
+            "groups": tuple(new_cache["groups"]),
+            "tail": tuple(new_cache["tail"]),
+        }
+        if cache
+        else None
+    )
+    return x, out_cache, {"moe_aux": aux_l, "tokens_per_expert": aux_c}
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    *,
+    tokens=None,
+    embeds=None,
+    prefix_embeds=None,
+    positions=None,
+    unroll_attn: bool = False,
+    unroll_layers: bool = False,
+):
+    """Training forward: full sequence, no cache. Returns (logits, aux)."""
+    x = _embed(params, cfg, tokens, embeds, prefix_embeds)
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x, _, aux = _run_blocks(
+        params, cfg, x, positions=positions, cache=None,
+        unroll_attn=unroll_attn, unroll_layers=unroll_layers,
+    )
+    return _logits(params, cfg, x), aux
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    cache,
+    *,
+    tokens=None,
+    embeds=None,
+    prefix_embeds=None,
+    unroll_attn: bool = False,
+    unroll_layers: bool = False,
+):
+    """Serving prefill: runs the prompt, fills the cache.
+    Returns (logits, cache, aux)."""
+    x = _embed(params, cfg, tokens, embeds, prefix_embeds)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x, cache, aux = _run_blocks(
+        params, cfg, x, positions=positions, cache=cache,
+        unroll_attn=unroll_attn, unroll_layers=unroll_layers,
+    )
+    return _logits(params, cfg, x), cache, aux
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    cache,
+    tokens,
+    positions,
+    *,
+    unroll_layers: bool = False,
+):
+    """One decoding step. tokens: (B, 1) int32; positions: (B, 1) int32 (the
+    absolute index the new token occupies). Returns (logits, cache)."""
+    x = _embed(params, cfg, tokens)
+    x, cache, _ = _run_blocks(
+        params, cfg, x, positions=positions, cache=cache,
+        unroll_attn=False, unroll_layers=unroll_layers,
+    )
+    return _logits(params, cfg, x), cache

@@ -1,0 +1,181 @@
+"""Mixture-of-experts FFN with Auto-SpMV-selectable dispatch formats.
+
+The router's token->expert assignment is a sparse matrix (rows = experts,
+nnz per row = routed tokens). The three dispatch strategies are the paper's
+storage formats in disguise (DESIGN.md §3):
+
+* ``dense``  — every expert runs on every token, weighted by the routing
+  probabilities (zeros computed, exactly like a dense SpMV). The paper's
+  "dense formats are inefficient" baseline; only viable on small configs.
+* ``ell``    — one fixed capacity C per expert; token ids are packed into an
+  (E, C) index plane with zero-padding — ELLPACK on the assignment matrix.
+* ``sell``   — two capacity classes: the hottest E/8 experts get 4C, the
+  rest C/2 — a two-slice SELL that cuts padding on skewed routing while
+  dropping fewer tokens on hot experts.
+
+``repro.core.features.features_from_assignment_histogram`` turns the routing
+histogram into Table-2 features so the run-time mode can pick the format.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    specs = {
+        "router": ParamSpec((d, e), ("embed", "experts"), dtype="float32"),
+        "w_gate": ParamSpec((e, d, fe), ("experts", "embed", "ffn")),
+        "w_up": ParamSpec((e, d, fe), ("experts", "embed", "ffn")),
+        "w_down": ParamSpec((e, fe, d), ("experts", "ffn", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        specs["shared"] = {
+            "w_gate": ParamSpec((d, fs), ("embed", "ffn")),
+            "w_up": ParamSpec((d, fs), ("embed", "ffn")),
+            "w_down": ParamSpec((fs, d), ("ffn", "embed")),
+        }
+    return specs
+
+
+def _capacity(T: int, cfg: ModelConfig) -> int:
+    c = int(T * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max((c + 7) // 8 * 8, 8)
+
+
+def _pack_by_expert(e_flat, t_flat, w_flat, n_rows: int, cap: int, row_of=None):
+    """Pack flat (expert, token, weight) assignments into (n_rows, cap)
+    planes — the ELL conversion of the assignment matrix. ``row_of`` maps an
+    expert id to its output row (identity when None); assignments mapping to
+    row -1 or overflowing the capacity land in spill slots and are dropped.
+    """
+    TK = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)
+    e_s, t_s, w_s = e_flat[order], t_flat[order], w_flat[order]
+    # position within each expert's run of the sorted assignment list
+    first = jnp.searchsorted(e_s, e_s, side="left")
+    pos = jnp.arange(TK) - first
+    rows = e_s if row_of is None else row_of[e_s]
+    ok = (pos < cap) & (rows >= 0)
+    r_c = jnp.where(ok, rows, n_rows)  # spill row
+    p_c = jnp.where(ok, pos, cap)  # spill col
+    idx = jnp.zeros((n_rows + 1, cap + 1), jnp.int32).at[r_c, p_c].set(t_s)
+    wgt = jnp.zeros((n_rows + 1, cap + 1), w_s.dtype).at[r_c, p_c].set(w_s)
+    return idx[:n_rows, :cap], wgt[:n_rows, :cap]
+
+
+def _expert_ffn(xg, w_gate, w_up, w_down, cd):
+    """xg: (..., E, C, D) grouped tokens; expert-batched gated FFN."""
+    g = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", xg, w_gate.astype(cd)))
+    u = jnp.einsum("...ecd,edf->...ecf", xg, w_up.astype(cd))
+    return jnp.einsum("...ecf,efd->...ecd", g * u, w_down.astype(cd))
+
+
+def _route(params, x, cfg):
+    """Router: fp32 softmax, top-k, renormalized weights."""
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, cfg.top_k)  # (B,T,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # GShard load-balance loss: E * sum_e fraction_e * prob_e
+    K = cfg.top_k
+    counts = jnp.zeros((x.shape[0], cfg.n_experts), jnp.float32)
+    counts = jax.vmap(lambda c, e: c.at[e.reshape(-1)].add(1.0))(counts, top_e)
+    frac = counts / (x.shape[1] * K)
+    aux = cfg.n_experts * jnp.mean(jnp.sum(frac * probs.mean(axis=1), axis=-1))
+    return top_e, top_w, counts, aux
+
+
+def moe_ffn(
+    params: dict, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, T, D) -> (y, aux_loss, tokens_per_expert)."""
+    B, T, D = x.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    E, K = cfg.n_experts, cfg.top_k
+    top_e, top_w, counts, aux = _route(params, x, cfg)
+
+    fmt = cfg.dispatch_format
+    if fmt == "dense":
+        if T * E * cfg.d_ff_expert > (1 << 28):
+            raise ValueError(
+                "dense dispatch on a config this large would materialize "
+                f"{T}x{E}x{cfg.d_ff_expert} activations; use ell/sell"
+            )
+        # every expert computes every token (the dense-format baseline)
+        xe = jnp.broadcast_to(x[:, None, :, :], (B, E, T, D)).astype(cd)
+        h = _expert_ffn(xe, params["w_gate"], params["w_up"], params["w_down"], cd)  # (B,E,T,D)
+        gate_full = jnp.zeros((B, T, E), cd)
+        gate_full = jax.vmap(
+            lambda g, e, w: g.at[jnp.arange(T)[:, None], e].set(w.astype(cd))
+        )(gate_full, top_e, top_w)
+        y = jnp.einsum("betd,bte->btd", h, gate_full)
+    elif fmt in ("ell", "sell"):
+        t_flat = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K)).reshape(-1)
+
+        def one_batch(xb, eb, wb, cb):
+            e_flat = eb.reshape(-1)
+            w_flat = wb.reshape(-1).astype(cd)
+            pieces = []
+            if fmt == "ell":
+                cap = _capacity(T, cfg)
+                idx, wgt = _pack_by_expert(e_flat, t_flat, w_flat, E, cap)
+                buckets = [(jnp.arange(E), idx, wgt)]
+            else:
+                base = _capacity(T, cfg)
+                e_hot = max(E // 8, 1)
+                cap_hot, cap_cold = 4 * base, max(base // 2, 8)
+                hot_ids = jax.lax.top_k(cb, e_hot)[1]
+                rank = jnp.full((E,), -1, jnp.int32).at[hot_ids].set(
+                    jnp.arange(e_hot, dtype=jnp.int32)
+                )
+                idx_h, wgt_h = _pack_by_expert(e_flat, t_flat, w_flat, e_hot, cap_hot, row_of=rank)
+                cold_row = jnp.where(rank >= 0, -1, jnp.arange(E, dtype=jnp.int32))
+                idx_c, wgt_c = _pack_by_expert(e_flat, t_flat, w_flat, E, cap_cold, row_of=cold_row)
+                buckets = [(hot_ids, idx_h, wgt_h), (jnp.arange(E), idx_c, wgt_c)]
+            yb = jnp.zeros((T, D), cd)
+            for ids, idx, wgt in buckets:
+                xg = xb[idx]  # (rows, cap, D)
+                h = _expert_ffn(
+                    xg,
+                    params["w_gate"][ids],
+                    params["w_up"][ids],
+                    params["w_down"][ids],
+                    cd,
+                )
+                yb = yb.at[idx.reshape(-1)].add(
+                    (h * wgt[..., None]).reshape(-1, D)
+                )
+            return yb
+
+        y = jax.vmap(one_batch)(x.astype(cd), top_e, top_w, counts)
+    else:
+        raise ValueError(f"unknown dispatch format {fmt!r}")
+
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        g = jax.nn.silu(jnp.einsum("btd,df->btf", x, sh["w_gate"].astype(cd)))
+        u = jnp.einsum("btd,df->btf", x, sh["w_up"].astype(cd))
+        y = y + jnp.einsum("btf,fd->btd", g * u, sh["w_down"].astype(cd))
+    return y.astype(x.dtype), aux, counts.sum(0)
+
+
+def select_dispatch_format(tokens_per_expert) -> str:
+    """Auto-SpMV run-time mode for MoE: pick the dispatch format from the
+    routing histogram's sparsity features (host-side, between-step decision;
+    jit specialization is per-format, like the paper's kernel selection)."""
+    import numpy as np
+
+    from repro.core.features import features_from_assignment_histogram
+
+    f = features_from_assignment_histogram(np.asarray(tokens_per_expert))
+    # skewed routing (low ELL efficiency) -> SELL two-slice dispatch
+    if f.ell_ratio < 0.5 and f.std_nnz > 0.5 * max(f.avg_nnz, 1e-9):
+        return "sell"
+    return "ell"

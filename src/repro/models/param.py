@@ -1,0 +1,100 @@
+"""Parameter-spec trees: shapes + logical sharding axes, materializable
+either as ShapeDtypeStructs (dry-run: no allocation) or as initialized
+arrays (training). No flax in the environment — models are pure functions
+over these pytrees.
+
+Logical axis vocabulary (mapped to mesh axes by repro.dist.sharding):
+  "vocab"    embedding rows / logits columns        -> model
+  "embed"    d_model dim of weight matrices         -> data (FSDP / ZeRO-3)
+  "heads"    fused attention-head dim               -> model
+  "kv"       kv-head dim                            -> model if divisible
+  "ffn"      feed-forward hidden                    -> model
+  "experts"  expert dim of MoE weight stacks        -> (none; expert-TP via ffn)
+  "rnn"      recurrent state width                  -> model
+  "layers"   scanned layer-stack dim                -> (none)
+  None       replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0  # stddev multiplier for normal init
+    dtype: str | None = None  # override the config param_dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_specs(tree: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacked (scanned) leading dim to every spec in the tree."""
+
+    def add(spec: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(
+            spec, shape=(n, *spec.shape), axes=(axis_name, *spec.axes)
+        )
+
+    return jax.tree.map(add, tree, is_leaf=is_spec)
+
+
+def abstract_params(tree: Any, default_dtype: str) -> Any:
+    """ShapeDtypeStruct tree — what the dry-run lowers against."""
+
+    def conv(spec: ParamSpec):
+        return jax.ShapeDtypeStruct(spec.shape, jnp.dtype(spec.dtype or default_dtype))
+
+    return jax.tree.map(conv, tree, is_leaf=is_spec)
+
+
+def axes_tree(tree: Any) -> Any:
+    """Logical-axes tree (same structure, tuples at leaves)."""
+    return jax.tree.map(lambda s: s.axes, tree, is_leaf=is_spec)
+
+
+def init_params(tree: Any, rng: jax.Array, default_dtype: str) -> Any:
+    """Materialize real parameters (smoke tests / the train example)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def one(spec: ParamSpec, key):
+        dtype = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / max(fan_in, 1) ** 0.5
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+def param_count(tree: Any) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    total = 0
+    for leaf in leaves:
+        shape = leaf.shape
+        n = 1
+        for s in shape:
+            n *= int(s)
+        total += n
+    return total
+
+
+MapFn = Callable[[ParamSpec], Any]

@@ -1,0 +1,337 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma), mLSTM + sLSTM (xLSTM).
+
+TPU adaptation notes:
+* RG-LRU is a diagonal linear recurrence -> ``jax.lax.associative_scan``
+  (log-depth tree, fully counted by XLA cost analysis).
+* mLSTM uses the chunkwise-parallel form: intra-chunk quadratic attention
+  with decay + inter-chunk state combined by an associative scan over chunk
+  summaries. All matmuls are batched over chunks (no sequential loop), so
+  the MXU stays busy and HLO FLOPs are exact.
+* sLSTM's recurrence is inherently sequential (the xLSTM paper says as
+  much); it runs as a lax.scan over T. Its in-scan recurrent matmuls are
+  undercounted by XLA cost analysis — the roofline tooling notes this and
+  the analytic MODEL_FLOPS covers it.
+
+Decode paths update O(1)-size states — why these archs run the long_500k
+cell (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d, r, k = cfg.d_model, cfg.rnn_dim, cfg.conv1d_size
+    h = cfg.n_heads
+    rh = r // h
+    return {
+        "w_in": ParamSpec((d, r), ("embed", "rnn")),
+        "w_gate": ParamSpec((d, r), ("embed", "rnn")),
+        "conv_w": ParamSpec((k, r), (None, "rnn")),
+        "conv_b": ParamSpec((r,), (None,), init="zeros"),
+        "wa": ParamSpec((h, rh, rh), (None, None, None)),  # block-diag recurrence gate
+        "ba": ParamSpec((r,), (None,), init="zeros"),
+        "wx": ParamSpec((h, rh, rh), (None, None, None)),  # block-diag input gate
+        "bx": ParamSpec((r,), (None,), init="zeros"),
+        "lam": ParamSpec((r,), (None,), init="ones"),  # a = sigmoid(lam+4) ~ .98
+        "w_out": ParamSpec((r, d), ("rnn", "embed")),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv along T. x: (B,T,R), w: (k,R).
+    With ``state`` (B,k-1,R): single-step (T small) decode path; returns
+    (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)) + b
+    return y.astype(x.dtype), new_state
+
+
+def _lru_gates(params, xc, cfg):
+    h = cfg.n_heads
+    B, T, R = xc.shape
+    xh = xc.reshape(B, T, h, R // h).astype(jnp.float32)
+    r_t = jax.nn.sigmoid(
+        jnp.einsum("bthr,hrs->bths", xh, params["wa"].astype(jnp.float32)).reshape(B, T, R)
+        + params["ba"].astype(jnp.float32)
+    )
+    i_t = jax.nn.sigmoid(
+        jnp.einsum("bthr,hrs->bths", xh, params["wx"].astype(jnp.float32)).reshape(B, T, R)
+        + params["bx"].astype(jnp.float32)
+    )
+    # a_t = exp(-8 * softplus(lam) * r_t)   (Griffin eq. 4, c = 8)
+    log_a = -8.0 * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r_t
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i_t * xc.astype(jnp.float32)
+
+
+def rglru(params, x, cfg: ModelConfig, *, cache=None):
+    """Full RG-LRU residual-block mixer. x: (B,T,D).
+    cache: {"h": (B,R), "conv": (B,k-1,R)} for decode."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    xb = jnp.einsum("btd,dr->btr", x, params["w_in"].astype(cd))
+    gb = jnp.einsum("btd,dr->btr", x, params["w_gate"].astype(cd))
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv1d(xb, params["conv_w"].astype(cd), params["conv_b"].astype(cd), conv_state)
+    a, bx = _lru_gates(params, xc, cfg)
+    if cache is None:
+        # diagonal linear recurrence via associative scan over T
+        def combine(u, v):
+            a1, b1 = u
+            a2, b2 = v
+            return a1 * a2, b1 * a2 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        new_cache = None
+    else:
+        h = a[:, 0] * cache["h"].astype(jnp.float32) + bx[:, 0]
+        new_cache = {"h": h, "conv": new_conv}
+        h = h[:, None, :]
+    y = (h.astype(cd) * jax.nn.gelu(gb)).astype(cd)
+    return jnp.einsum("btr,rd->btd", y, params["w_out"].astype(cd)), new_cache
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int) -> dict:
+    r, k = cfg.rnn_dim, cfg.conv1d_size
+    return {
+        "h": ParamSpec((batch, r), ("batch", "rnn"), init="zeros", dtype="float32"),
+        "conv": ParamSpec((batch, k - 1, r), ("batch", None, "rnn"), init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — chunkwise-parallel, sigma-gated variant
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    m = 2 * d  # projection factor 2 (xLSTM-1.3B)
+    h = cfg.n_heads
+    dh = m // h
+    return {
+        "ln": ParamSpec((d,), (None,), init="ones"),
+        "w_up": ParamSpec((d, 2 * m), ("embed", "ffn")),  # [mixer | gate] branches
+        "wq": ParamSpec((m, h, dh), ("ffn", "heads", None)),
+        "wk": ParamSpec((m, h, dh), ("ffn", "heads", None)),
+        "wv": ParamSpec((m, h, dh), ("ffn", "heads", None)),
+        "w_if": ParamSpec((m, 2 * h), ("ffn", None)),  # input/forget gates per head
+        "out_norm": ParamSpec((m,), (None,), init="ones"),
+        "w_down": ParamSpec((m, d), ("ffn", "embed")),
+    }
+
+
+def _mlstm_core(q, k, v, i_gate, f_gate, chunk: int, state=None):
+    """Chunkwise linear attention with per-head scalar decay.
+
+    q/k/v: (B,T,H,dh); i_gate/f_gate: (B,T,H) in (0,1).
+    Returns (out (B,T,H,dh), final_state (C, n)).
+    """
+    B, T, H, dh = q.shape
+    scale = dh**-0.5
+    q = q.astype(jnp.float32) * scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    ki = k * i_gate[..., None]  # input gate scales the written key
+    log_f = jnp.log(jnp.maximum(f_gate.astype(jnp.float32), 1e-9))
+
+    if state is not None and T == 1:  # decode step
+        C, n = state
+        C = f_gate[:, 0, :, None, None] * C + jnp.einsum("bhk,bhv->bhkv", ki[:, 0], v[:, 0])
+        n = f_gate[:, 0, :, None] * n + ki[:, 0]
+        num = jnp.einsum("bhk,bhkv->bhv", q[:, 0], C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q[:, 0], n))[..., None], 1.0)
+        return (num / den)[:, None], (C, n)
+
+    T_orig = T
+    if T % chunk:
+        # pad with identity steps: f=1 (no decay), i=0 (nothing written)
+        pad = chunk - T % chunk
+        padT = lambda a, fill=0.0: jnp.pad(
+            a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2), constant_values=fill
+        )
+        q, k, v = padT(q), padT(k), padT(v)
+        ki = padT(ki)
+        log_f = padT(log_f, 0.0)  # log f = 0 -> f = 1
+        T += pad
+    nc = T // chunk
+    shp = (B, nc, chunk, H)
+    qc = q.reshape(B, nc, chunk, H, dh)
+    kc = ki.reshape(B, nc, chunk, H, dh)
+    vc = v.reshape(B, nc, chunk, H, dh)
+    lf = log_f.reshape(shp)
+    cums = jnp.cumsum(lf, axis=2)  # inclusive cumulative log-decay
+    total = cums[:, :, -1, :]  # (B,nc,H)
+
+    # ---- chunk summaries: S_c = sum_s exp(total - cums_s) k_s v_s^T
+    wk = jnp.exp(total[:, :, None, :] - cums)  # decay from step s to chunk end
+    S_c = jnp.einsum("bnch,bnchk,bnchv->bnhkv", wk, kc, vc)
+    n_c = jnp.einsum("bnch,bnchk->bnhk", wk, kc)
+
+    # ---- inter-chunk recurrence over chunk axis (associative scan)
+    def combine(u, x_):
+        a1, S1, n1 = u
+        a2, S2, n2 = x_
+        return a1 * a2, S1 * a2[..., None, None] + S2, n1 * a2[..., None] + n2
+
+    A = jnp.exp(total)
+    _, S_pref, n_pref = jax.lax.associative_scan(combine, (A, S_c, n_c), axis=1)
+    zeroS = jnp.zeros_like(S_pref[:, :1])
+    zeron = jnp.zeros_like(n_pref[:, :1])
+    S_prev = jnp.concatenate([zeroS, S_pref[:, :-1]], axis=1)  # state before chunk
+    n_prev = jnp.concatenate([zeron, n_pref[:, :-1]], axis=1)
+    if state is not None:
+        C0, n0 = state
+        pref_decay = jnp.concatenate([jnp.ones_like(A[:, :1]), jnp.cumprod(A, 1)[:, :-1]], 1)
+        S_prev = S_prev + pref_decay[..., None, None] * C0[:, None]
+        n_prev = n_prev + pref_decay[..., None] * n0[:, None]
+
+    # ---- outputs: inter (q against carried state) + intra (masked attn)
+    wq = jnp.exp(cums)  # decay from chunk start through step t
+    inter = jnp.einsum("bnthk,bnhkv->bnthv", qc * wq[..., None], S_prev)
+    inter_n = jnp.einsum("bnthk,bnhk->bnth", qc * wq[..., None], n_prev)
+    # intra: D[t,s] = exp(cums_t - cums_s) for s <= t
+    ld = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (B,nc,t,s,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    D = jnp.where(causal[None, None, :, :, None], jnp.exp(ld), 0.0)
+    scores = jnp.einsum("bnthk,bnshk->bntsh", qc, kc) * D
+    intra = jnp.einsum("bntsh,bnshv->bnthv", scores, vc)
+    intra_n = jnp.sum(scores, axis=3)
+    num = inter + intra
+    den = jnp.maximum(jnp.abs(inter_n + intra_n)[..., None], 1.0)
+    out = (num / den).reshape(B, T, H, dh)[:, :T_orig]
+
+    C_fin, n_fin = S_pref[:, -1], n_pref[:, -1]
+    if state is not None:
+        totA = jnp.prod(A, axis=1)
+        C_fin = C_fin + totA[..., None, None] * state[0]
+        n_fin = n_fin + totA[..., None] * state[1]
+    return out, (C_fin, n_fin)
+
+
+def mlstm_block(params, x, cfg: ModelConfig, *, cache=None):
+    """Pre-norm mLSTM block with gated output. x: (B,T,D)."""
+    from repro.models.layers import rmsnorm
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, T, D = x.shape
+    h = cfg.n_heads
+    xin = rmsnorm(x, params["ln"])
+    up = jnp.einsum("btd,dm->btm", xin, params["w_up"].astype(cd))
+    m = up.shape[-1] // 2
+    xm, zg = up[..., :m], up[..., m:]
+    q = jnp.einsum("btm,mhk->bthk", xm, params["wq"].astype(cd))
+    k = jnp.einsum("btm,mhk->bthk", xm, params["wk"].astype(cd))
+    v = jnp.einsum("btm,mhk->bthk", xm, params["wv"].astype(cd))
+    gates = jax.nn.sigmoid(
+        jnp.einsum("btm,mg->btg", xm, params["w_if"].astype(cd)).astype(jnp.float32)
+    )
+    i_g, f_g = gates[..., :h], gates[..., h:]
+    # long-memory bias: keep forget gates near 1
+    f_g = 0.9 + 0.1 * f_g
+    state = None if cache is None else (cache["C"], cache["n"])
+    out, (C_f, n_f) = _mlstm_core(q, k, v, i_g, f_g, cfg.mlstm_chunk, state)
+    out = out.reshape(B, T, m).astype(cd)
+    out = rmsnorm(out, params["out_norm"]) * jax.nn.silu(zg)
+    y = jnp.einsum("btm,md->btd", out, params["w_down"].astype(cd))
+    new_cache = (
+        None
+        if cache is None
+        else {"C": C_f.astype(cache["C"].dtype), "n": n_f.astype(cache["n"].dtype)}
+    )
+    return x + y, new_cache
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int) -> dict:
+    h = cfg.n_heads
+    dh = 2 * cfg.d_model // h
+    # the matrix memory is the decode working set (dk x dv per head); its
+    # value dim shards over the model axis ("ffn") — few heads alone cannot
+    # cover a 16-way TP axis (EXPERIMENTS.md §Perf, xlstm decode iteration)
+    return {
+        "C": ParamSpec((batch, h, dh, dh), ("batch", "heads", None, "ffn"), init="zeros", dtype=cfg.state_dtype),
+        "n": ParamSpec((batch, h, dh), ("batch", "heads", None), init="zeros", dtype=cfg.state_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — sequential scalar-memory recurrence
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    return {
+        "ln": ParamSpec((d,), (None,), init="ones"),
+        "w_gates": ParamSpec((d, 4, h, dh), ("embed", None, "heads", None)),
+        "r_gates": ParamSpec((4, h, dh, dh), (None, "heads", None, None), scale=0.5),
+        "b_gates": ParamSpec((4, h, dh), (None, "heads", None), init="zeros"),
+        "w_down": ParamSpec((d, d), ("embed", "embed")),
+    }
+
+
+def slstm_block(params, x, cfg: ModelConfig, *, cache=None):
+    """x: (B,T,D). Stabilized exponential gating (xLSTM eqs. 13-19)."""
+    from repro.models.layers import rmsnorm
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, T, D = x.shape
+    h = cfg.n_heads
+    dh = D // h
+    xin = rmsnorm(x, params["ln"])
+    # input contributions for all steps upfront (B,T,4,H,dh)
+    zx = jnp.einsum("btd,dghk->btghk", xin, params["w_gates"].astype(cd)).astype(jnp.float32)
+    r_w = params["r_gates"].astype(jnp.float32)
+    b = params["b_gates"].astype(jnp.float32)
+
+    if cache is None:
+        c0 = jnp.zeros((B, h, dh), jnp.float32)
+        n0 = jnp.ones((B, h, dh), jnp.float32)
+        m0 = jnp.zeros((B, h, dh), jnp.float32)
+        h0 = jnp.zeros((B, h, dh), jnp.float32)
+    else:
+        c0, n0, m0, h0 = cache["c"], cache["n"], cache["m"], cache["h"]
+
+    def step(carry, zt):
+        c, n, m, hp = carry
+        rec = jnp.einsum("bhk,ghks->bghs", hp, r_w)
+        g = zt + rec + b  # (B,4,H,dh)
+        zt_, it_, ft_, ot_ = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        m_new = jnp.maximum(ft_ + m, it_)
+        i_p = jnp.exp(it_ - m_new)
+        f_p = jnp.exp(ft_ + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(zt_)
+        n = f_p * n + i_p
+        hv = jax.nn.sigmoid(ot_) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, hv), hv
+
+    (c_f, n_f, m_f, h_f), hs = jax.lax.scan(step, (c0, n0, m0, h0), zx.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, T, D).astype(cd)
+    y = jnp.einsum("btd,de->bte", hs, params["w_down"].astype(cd))
+    new_cache = None if cache is None else {"c": c_f, "n": n_f, "m": m_f, "h": h_f}
+    return x + y, new_cache
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int) -> dict:
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    s = ParamSpec((batch, h, dh), ("batch", "heads", None), init="zeros", dtype="float32")
+    return {"c": s, "n": ParamSpec((batch, h, dh), ("batch", "heads", None), init="ones", dtype="float32"), "m": s, "h": s}

@@ -1,0 +1,14 @@
+from repro.optim.adamw import AdamWConfig, apply_adamw, init_opt_state
+from repro.optim.schedule import constant, cosine_schedule, linear_warmup
+from repro.optim.compress import compress_gradients, init_error_feedback
+
+__all__ = [
+    "AdamWConfig",
+    "apply_adamw",
+    "init_opt_state",
+    "constant",
+    "cosine_schedule",
+    "linear_warmup",
+    "compress_gradients",
+    "init_error_feedback",
+]

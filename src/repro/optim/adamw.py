@@ -1,0 +1,95 @@
+"""AdamW from scratch (optax is not installed).
+
+Decoupled weight decay, global-norm gradient clipping, optional low-precision
+(bf16) first/second moments for the trillion-parameter archs — the moment
+dtype is the dominant optimizer-memory knob at 512 chips (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    state_dtype: str = "float32"  # bf16 halves optimizer memory
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_adamw(
+    params: Any, grads: Any, state: dict, cfg: AdamWConfig
+) -> tuple[Any, dict, dict]:
+    """One AdamW update. Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    lr = cfg.lr_at(step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m32 / b1c
+        vh = v32 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+            m32.astype(sdt),
+            v32.astype(sdt),
+        )
+
+    # explicit flatten/unflatten: the params tree may contain tuples as
+    # structure, so a tuple-returning tree.map would be ambiguous
+    p_leaves, treedef = jax.tree.flatten(params)
+    results = [
+        upd(p, g, m, v)
+        for p, g, m, v in zip(
+            p_leaves,
+            jax.tree.leaves(grads),
+            jax.tree.leaves(state["m"]),
+            jax.tree.leaves(state["v"]),
+        )
+    ]
+    new_params = treedef.unflatten([r[0] for r in results])
+    new_m = treedef.unflatten([r[1] for r in results])
+    new_v = treedef.unflatten([r[2] for r in results])
+    return (
+        new_params,
+        {"m": new_m, "v": new_v, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

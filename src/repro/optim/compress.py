@@ -1,0 +1,51 @@
+"""Top-k gradient compression with error feedback (Stich et al. 2018).
+
+At 1000+-node scale the DP all-reduce dominates step time for small models;
+top-k sparsification with error feedback keeps convergence while cutting
+exchanged bytes ~1/k. Under pjit/GSPMD the all-reduce is emitted by XLA
+inside the backward pass, so the compression here is applied at the
+optimizer boundary: it is exact in semantics (error feedback carries the
+residual) and becomes a true bandwidth saving when the DP reduce is staged
+through a shard_map psum of the sparsified values — the integration point
+is `trainer.make_train_step(compress_frac=...)`, and the bytes saved are
+reported in the roofline collective term analysis.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_sparsify(g: jax.Array, frac: float) -> jax.Array:
+    flat = g.reshape(-1)
+    k = max(int(flat.shape[0] * frac), 1)
+    if k >= flat.shape[0]:
+        return g
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_gradients(
+    grads: Any, error: Any, frac: float = 0.1
+) -> tuple[Any, Any, dict]:
+    """Returns (compressed grads, new error feedback, metrics)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        sparse = _topk_sparsify(g32, frac)
+        return sparse, g32 - sparse
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    results = [one(g, e) for g, e in zip(g_leaves, jax.tree.leaves(error))]
+    comp = treedef.unflatten([r[0] for r in results])
+    new_err = treedef.unflatten([r[1] for r in results])
+    nnz = sum(jnp.sum(c != 0).astype(jnp.float32) for c in jax.tree.leaves(comp))
+    tot = sum(c.size for c in jax.tree.leaves(comp))
+    return comp, new_err, {"compress_density": nnz / tot}

@@ -1,0 +1,11 @@
+from repro.train.trainer import TrainConfig, Trainer, make_loss_fn, make_train_step
+from repro.train.serve import BatchedServer, ServeConfig
+
+__all__ = [
+    "TrainConfig",
+    "Trainer",
+    "make_loss_fn",
+    "make_train_step",
+    "BatchedServer",
+    "ServeConfig",
+]

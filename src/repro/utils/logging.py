@@ -1,0 +1,35 @@
+"""Structured logging for the repro framework.
+
+One logger per subsystem; format includes wall-clock so multi-hour runs
+(dataset collection, dry-run sweeps) are auditable after the fact.
+"""
+
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_FORMAT = "%(asctime)s %(levelname).1s %(name)s: %(message)s"
+_configured = False
+
+
+def _configure_root() -> None:
+    global _configured
+    if _configured:
+        return
+    handler = logging.StreamHandler(sys.stderr)
+    handler.setFormatter(logging.Formatter(_FORMAT, datefmt="%H:%M:%S"))
+    root = logging.getLogger("repro")
+    root.addHandler(handler)
+    root.setLevel(os.environ.get("REPRO_LOG_LEVEL", "INFO").upper())
+    root.propagate = False
+    _configured = True
+
+
+def get_logger(name: str) -> logging.Logger:
+    """Return a logger namespaced under ``repro``."""
+    _configure_root()
+    if not name.startswith("repro"):
+        name = f"repro.{name}"
+    return logging.getLogger(name)

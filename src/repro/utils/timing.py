@@ -1,0 +1,72 @@
+"""Wall-time measurement helpers.
+
+The paper measures kernel latency by repeated runs and averaging (Section
+6.3, 500-200000 reps per kernel). ``measure_wall_time`` reproduces that
+protocol for host-side (CPU) measurement: warmup, then ``reps`` timed calls
+with ``block_until_ready`` so async dispatch does not hide work.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+
+@dataclass
+class Timer:
+    """Accumulating context-manager timer, reusable across sections."""
+
+    elapsed: float = 0.0
+    _t0: float = field(default=0.0, repr=False)
+
+    def __enter__(self) -> "Timer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.elapsed += time.perf_counter() - self._t0
+
+
+def _block(out: Any) -> None:
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def measure_wall_time(
+    fn: Callable[[], Any],
+    *,
+    warmup: int = 2,
+    reps: int = 5,
+    min_time_s: float = 0.0,
+) -> dict[str, float]:
+    """Time ``fn`` with warmup; returns mean/min/std seconds over reps.
+
+    ``min_time_s`` keeps measuring past ``reps`` until the accumulated timed
+    window reaches the floor — the paper's variable 500-200000 rep protocol,
+    bounded for CPU practicality.
+    """
+    for _ in range(warmup):
+        _block(fn())
+    samples: list[float] = []
+    total = 0.0
+    while len(samples) < reps or total < min_time_s:
+        t0 = time.perf_counter()
+        _block(fn())
+        dt = time.perf_counter() - t0
+        samples.append(dt)
+        total += dt
+        if len(samples) >= 10000:  # hard cap
+            break
+    n = len(samples)
+    mean = sum(samples) / n
+    var = sum((s - mean) ** 2 for s in samples) / max(n - 1, 1)
+    return {
+        "mean_s": mean,
+        "min_s": min(samples),
+        "std_s": var**0.5,
+        "reps": float(n),
+    }

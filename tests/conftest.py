@@ -1,0 +1,21 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the single real CPU device; only launch/dryrun.py forces 512
+placeholder devices (and only when executed as a script)."""
+
+import numpy as np
+import pytest
+from hypothesis import settings, HealthCheck
+
+# single-core container: keep hypothesis example counts modest by default
+settings.register_profile(
+    "repro",
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

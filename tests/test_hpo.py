@@ -1,0 +1,87 @@
+"""Tests for the from-scratch HPO (random + TPE) — the Optuna substitute."""
+
+import numpy as np
+
+from repro.core.hpo import (
+    StudyResult,
+    grid_iter,
+    kfold_indices,
+    random_search,
+    tpe_search,
+    tune_model,
+)
+from repro.ml.metrics import accuracy_score
+from repro.ml.model_zoo import CLASSIFIER_ZOO
+
+SPACE = {"a": [0, 1, 2, 3], "b": ["x", "y"], "c": [0.1, 0.2, 0.3]}
+
+
+def _objective(params):
+    # optimum at a=2, b='y', c=0.2
+    return -(
+        (params["a"] - 2) ** 2
+        + (0 if params["b"] == "y" else 1)
+        + 10 * (params["c"] - 0.2) ** 2
+    )
+
+
+def test_grid_iter_covers_space():
+    combos = list(grid_iter(SPACE))
+    assert len(combos) == 4 * 2 * 3
+    assert {tuple(sorted(c.items())) for c in combos} == {
+        tuple(sorted(c.items())) for c in combos
+    }
+
+
+def test_random_search_finds_good_region():
+    res = random_search(_objective, SPACE, n_trials=24, seed=0)
+    assert isinstance(res, StudyResult)
+    assert res.best_value >= -1.0
+    assert res.n_trials == 24
+
+
+def test_random_search_budget_capped_by_space():
+    res = random_search(lambda p: -p["a"], {"a": [0, 1]}, n_trials=50, seed=0)
+    assert res.n_trials == 2
+    assert res.best_params == {"a": 0}
+
+
+def test_tpe_finds_optimum():
+    res = tpe_search(_objective, SPACE, n_trials=24, n_warmup=6, seed=1)
+    assert res.best_params["b"] == "y"
+    assert abs(res.best_params["a"] - 2) <= 1
+    assert res.best_value > -1.1
+
+
+def test_tpe_beats_or_matches_random_on_average():
+    space = {"a": list(range(8)), "b": list(range(8))}
+
+    def obj(p):
+        return -((p["a"] - 5) ** 2 + (p["b"] - 3) ** 2)
+
+    r_vals, t_vals = [], []
+    for seed in range(5):
+        r_vals.append(random_search(obj, space, n_trials=16, seed=seed).best_value)
+        t_vals.append(tpe_search(obj, space, n_trials=16, n_warmup=6, seed=seed).best_value)
+    assert np.mean(t_vals) >= np.mean(r_vals) - 1.0
+
+
+def test_kfold_partitions():
+    folds = list(kfold_indices(20, 4, seed=0))
+    assert len(folds) == 4
+    all_val = np.concatenate([v for _, v in folds])
+    assert sorted(all_val) == list(range(20))
+    for tr, va in folds:
+        assert set(tr).isdisjoint(va)
+
+
+def test_tune_model_improves_or_matches_defaults():
+    rng = np.random.default_rng(0)
+    centers = np.array([[0, 0], [4, 4], [0, 4]])
+    y = rng.integers(0, 3, 150)
+    X = centers[y] + rng.normal(0, 0.8, (150, 2))
+    res = tune_model(
+        CLASSIFIER_ZOO["decision_tree"], X, y, accuracy_score, n_trials=6, cv=3, seed=0
+    )
+    assert res.best_value > 0.8
+    assert set(res.best_params) <= set(CLASSIFIER_ZOO["decision_tree"]["space"])

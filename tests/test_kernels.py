@@ -1,0 +1,135 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode).
+
+Every Pallas kernel is swept over shapes, dtypes, sparsity patterns and
+schedules and checked against ref.py. bf16 accumulation uses a loose
+tolerance (long-reduction precision, see kernel taxonomy Part E)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (
+    DEFAULT_SCHEDULE,
+    InfeasibleConfig,
+    KernelSchedule,
+    compile_spmv,
+    prepare,
+    spmm_pallas,
+    spmv_pallas,
+)
+from repro.kernels.ref import spmm_dense, spmv_dense
+from repro.sparse import FORMAT_NAMES
+from repro.sparse.generate import random_matrix
+
+FORMATS = list(FORMAT_NAMES)
+
+SCHEDULES = [
+    DEFAULT_SCHEDULE,
+    KernelSchedule(rows_per_block=8, nnz_tile=128, unroll=1),
+    KernelSchedule(rows_per_block=32, nnz_tile=256, unroll=2),
+    KernelSchedule(rows_per_block=128, nnz_tile=512, unroll=4),
+    KernelSchedule(rows_per_block=16, nnz_tile=128, unroll=1, accum_dtype="bfloat16"),
+    KernelSchedule(rows_per_block=64, nnz_tile=128, dimension_semantics="parallel"),
+]
+
+
+def _check(dense, fmt, sched, x=None, tol=None):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=dense.shape[1]).astype(np.float32) if x is None else x
+    ref = np.asarray(spmv_dense(dense, x))
+    mat = prepare(dense, fmt, sched)
+    y = np.asarray(spmv_pallas(mat, x, sched))
+    assert y.shape == (dense.shape[0],)
+    tol = tol or (3e-2 if sched.accum_dtype == "bfloat16" else 1e-4)
+    scale = np.abs(ref).max() + 1e-9
+    np.testing.assert_allclose(y / scale, ref / scale, atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("sched_i", range(len(SCHEDULES)))
+def test_schedule_sweep(fmt, sched_i):
+    dense = random_matrix(250, 11.0, "fem", seed=42).astype(np.float32)
+    _check(dense, fmt, SCHEDULES[sched_i])
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("pattern", ["fem", "powerlaw", "block", "banded", "denserows"])
+def test_pattern_sweep(fmt, pattern):
+    dense = random_matrix(200, 8.0, pattern, seed=9).astype(np.float32)
+    _check(dense, fmt, DEFAULT_SCHEDULE)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@settings(max_examples=8)
+@given(
+    n=st.integers(8, 300),
+    avg=st.floats(1.0, 24.0),
+    seed=st.integers(0, 10_000),
+)
+def test_random_shapes(fmt, n, avg, seed):
+    dense = random_matrix(n, avg, "fem", seed=seed).astype(np.float32)
+    _check(dense, fmt, KernelSchedule(rows_per_block=8, nnz_tile=128))
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_empty_rows(fmt):
+    """Rows with zero nonzeros must produce exact zeros."""
+    dense = np.zeros((64, 64), dtype=np.float32)
+    dense[10, 3] = 2.0
+    dense[50, 60] = -1.5
+    x = np.ones(64, dtype=np.float32)
+    mat = prepare(dense, fmt, DEFAULT_SCHEDULE)
+    y = np.asarray(spmv_pallas(mat, x, DEFAULT_SCHEDULE))
+    ref = dense @ x
+    np.testing.assert_allclose(y, ref, atol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_input_dtypes(fmt):
+    dense = random_matrix(100, 6.0, "fem", seed=5).astype(np.float32)
+    rng = np.random.default_rng(2)
+    for dt, tol in [(np.float32, 1e-4), (np.float64, 1e-4)]:
+        x = rng.normal(size=dense.shape[1]).astype(dt)
+        _check(dense.astype(dt), fmt, DEFAULT_SCHEDULE, x=x.astype(np.float32), tol=tol)
+
+
+def test_spmm_matches_dense():
+    dense = random_matrix(96, 7.0, "powerlaw", seed=11).astype(np.float32)
+    X = np.random.default_rng(1).normal(size=(dense.shape[1], 16)).astype(np.float32)
+    mat = prepare(dense, "ell", DEFAULT_SCHEDULE)
+    Y = np.asarray(spmm_pallas(mat, X))
+    np.testing.assert_allclose(Y, np.asarray(spmm_dense(dense, X)), rtol=1e-4, atol=1e-4)
+
+
+def test_misaligned_schedule_rejected():
+    dense = random_matrix(100, 6.0, "fem", seed=5).astype(np.float32)
+    mat = prepare(dense, "ell", KernelSchedule(nnz_tile=128))
+    with pytest.raises(InfeasibleConfig):
+        spmv_pallas(mat, np.ones(dense.shape[1], np.float32), KernelSchedule(nnz_tile=512))
+
+
+def test_sell_nnz_tile_mismatch_rejected():
+    dense = random_matrix(100, 6.0, "fem", seed=5).astype(np.float32)
+    mat = prepare(dense, "sell", KernelSchedule(nnz_tile=128))
+    with pytest.raises(InfeasibleConfig):
+        spmv_pallas(mat, np.ones(dense.shape[1], np.float32), KernelSchedule(nnz_tile=256))
+
+
+def test_compile_spmv_end_to_end():
+    dense = random_matrix(128, 9.0, "block", seed=8).astype(np.float32)
+    x = np.random.default_rng(3).normal(size=dense.shape[1]).astype(np.float32)
+    fn = compile_spmv(dense, "bell", KernelSchedule(rows_per_block=16))
+    np.testing.assert_allclose(
+        np.asarray(fn(x)), dense @ x, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        KernelSchedule(rows_per_block=10)  # not a sublane multiple
+    with pytest.raises(ValueError):
+        KernelSchedule(nnz_tile=100)  # not a lane multiple
+    with pytest.raises(ValueError):
+        KernelSchedule(unroll=3)  # must divide nnz_tile
+    with pytest.raises(ValueError):
+        KernelSchedule(accum_dtype="float16")

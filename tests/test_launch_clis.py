@@ -1,0 +1,45 @@
+"""Coverage for the launch CLIs (train/serve) on the host mesh — the same
+entry points a fleet run uses, at reduced scale."""
+
+import numpy as np
+
+from repro.launch.serve import main as serve_main
+from repro.launch.train import main as train_main
+
+
+def test_train_cli_runs_and_improves(tmp_path):
+    trainer = train_main([
+        "--arch", "qwen3-0.6b",
+        "--steps", "4",
+        "--seq-len", "32",
+        "--batch", "2",
+        "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "4",
+    ])
+    losses = [h["loss"] for h in trainer.history]
+    assert len(losses) == 4 and all(np.isfinite(losses))
+    assert trainer.ckpt.latest_step() == 4
+
+
+def test_train_cli_moe_with_dispatch_override(tmp_path):
+    trainer = train_main([
+        "--arch", "deepseek-moe-16b",
+        "--steps", "2",
+        "--seq-len", "32",
+        "--batch", "2",
+        "--dispatch-format", "sell",
+        "--ckpt-dir", str(tmp_path),
+    ])
+    assert trainer.cfg.dispatch_format == "sell"
+    assert len(trainer.history) == 2
+
+
+def test_serve_cli_generates():
+    done = serve_main([
+        "--arch", "llama3-8b",
+        "--requests", "2",
+        "--slots", "2",
+        "--max-new-tokens", "3",
+        "--max-len", "64",
+    ])
+    assert all(r.done and len(r.generated) == 3 for r in done)

@@ -1,0 +1,193 @@
+"""Tests for the from-scratch ML library (the paper's learning substrate)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ml import (
+    BayesianRidge,
+    DecisionTreeClassifier,
+    DecisionTreeRegressor,
+    GradientBoostingClassifier,
+    Lars,
+    Lasso,
+    MLPClassifier,
+    MLPRegressor,
+    NearestCentroid,
+    NonlinearSVM,
+    RandomForestClassifier,
+    RandomForestRegressor,
+    Ridge,
+    StandardScaler,
+    accuracy_score,
+    confusion_matrix,
+    f1_score,
+    mean_squared_error,
+    r2_score,
+    train_test_split,
+)
+from repro.ml.model_zoo import CLASSIFIER_ZOO, REGRESSOR_ZOO
+
+
+def _blobs(n=180, k=3, d=4, spread=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 3, (k, d))
+    y = rng.integers(0, k, n)
+    X = centers[y] + rng.normal(0, spread, (n, d))
+    return X, y
+
+
+# --------------------------------------------------------------------- metrics
+def test_accuracy_and_confusion():
+    y_true = np.array([0, 0, 1, 1, 2])
+    y_pred = np.array([0, 1, 1, 1, 2])
+    assert accuracy_score(y_true, y_pred) == pytest.approx(0.8)
+    cm = confusion_matrix(y_true, y_pred)
+    assert cm.sum() == 5 and cm[0, 1] == 1 and cm[1, 1] == 2
+
+
+def test_f1_perfect_and_degenerate():
+    assert f1_score([0, 1, 2], [0, 1, 2]) == pytest.approx(1.0)
+    assert f1_score([0, 0, 0], [1, 1, 1]) == pytest.approx(0.0)
+
+
+def test_r2_mse_basics():
+    y = np.array([1.0, 2.0, 3.0])
+    assert r2_score(y, y) == pytest.approx(1.0)
+    assert mean_squared_error(y, y + 1) == pytest.approx(1.0)
+    assert r2_score(y, np.full_like(y, y.mean())) == pytest.approx(0.0)
+
+
+# ----------------------------------------------------------------- classifiers
+@pytest.mark.parametrize("name", sorted(CLASSIFIER_ZOO))
+def test_classifier_separable(name):
+    X, y = _blobs(seed=1)
+    entry = CLASSIFIER_ZOO[name]
+    kw = dict(entry["defaults"])
+    if name == "mlp":  # keep CPU time low
+        kw.update(epochs=120, n_layers=2, hidden_layer_size=32)
+    if name == "gradient_boosting":
+        kw.update(n_estimators=30)
+    model = entry["ctor"](**kw)
+    Xtr, Xte, ytr, yte = train_test_split(X, y, 0.25, seed=2)
+    model.fit(Xtr, ytr)
+    assert accuracy_score(yte, model.predict(Xte)) > 0.8
+
+
+def test_tree_respects_max_depth():
+    X, y = _blobs(n=200, seed=3)
+    tree = DecisionTreeClassifier(max_depth=2).fit(X, y)
+    assert tree.depth() <= 2
+
+
+def test_tree_criteria_and_splitters():
+    X, y = _blobs(n=120, seed=4)
+    for crit in ("gini", "entropy", "log_loss"):
+        for splitter in ("best", "random"):
+            t = DecisionTreeClassifier(criterion=crit, splitter=splitter).fit(X, y)
+            assert t.score(X, y) > 0.9
+
+
+def test_tree_pure_node_shortcut():
+    X = np.array([[0.0], [1.0], [2.0]])
+    y = np.array([5, 5, 5])
+    t = DecisionTreeClassifier().fit(X, y)
+    assert (t.predict(X) == 5).all()
+
+
+def test_centroid_metrics_differ_only_in_distance():
+    X, y = _blobs(n=90, seed=5)
+    for metric in ("manhattan", "euclidean", "minkowski"):
+        m = NearestCentroid(metric=metric).fit(X, y)
+        assert m.score(X, y) > 0.85
+
+
+def test_svm_kernels():
+    X, y = _blobs(n=100, k=2, seed=6)
+    for kernel in ("linear", "rbf", "poly", "sigmoid"):
+        m = NonlinearSVM(kernel=kernel, n_iter=150).fit(X, y)
+        assert m.score(X, y) > 0.75, kernel
+
+
+def test_boosting_improves_with_stages():
+    X, y = _blobs(n=150, spread=1.5, seed=7)
+    weak = GradientBoostingClassifier(n_estimators=2, max_depth=1, seed=0).fit(X, y)
+    strong = GradientBoostingClassifier(n_estimators=40, max_depth=1, seed=0).fit(X, y)
+    assert strong.score(X, y) >= weak.score(X, y)
+
+
+def test_forest_majority_vote_shape():
+    X, y = _blobs(n=80, seed=8)
+    m = RandomForestClassifier(n_estimators=10).fit(X, y)
+    proba = m.predict_proba(X)
+    assert proba.shape == (80, len(np.unique(y)))
+    np.testing.assert_allclose(proba.sum(axis=1), 1.0, atol=1e-9)
+
+
+def test_mlp_multiclass():
+    X, y = _blobs(n=150, seed=9)
+    m = MLPClassifier(hidden_layer_size=32, n_layers=2, epochs=150).fit(X, y)
+    assert m.score(X, y) > 0.9
+
+
+# ------------------------------------------------------------------ regressors
+def _linear_data(n=120, d=5, noise=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    w = rng.normal(size=d)
+    y = X @ w + noise * rng.normal(size=n)
+    return X, y
+
+
+@pytest.mark.parametrize("cls", [Ridge, BayesianRidge, Lasso, Lars])
+def test_linear_models_recover_linear_signal(cls):
+    X, y = _linear_data(seed=11)
+    kw = {"alpha": 0.01} if cls is Lasso else {}
+    m = cls(**kw).fit(X, y)
+    assert r2_score(y, m.predict(X)) > 0.95
+
+
+def test_tree_regressor_fits_steps():
+    X = np.linspace(0, 1, 128)[:, None]
+    y = (X[:, 0] > 0.5).astype(float)
+    m = DecisionTreeRegressor(max_depth=2).fit(X, y)
+    assert r2_score(y, m.predict(X)) > 0.99
+
+
+def test_forest_regressor_beats_single_tree_on_noise():
+    rng = np.random.default_rng(13)
+    X = rng.normal(size=(200, 4))
+    y = np.sin(2 * X[:, 0]) + 0.3 * rng.normal(size=200)
+    Xtr, Xte, ytr, yte = train_test_split(X, y, 0.3, seed=1)
+    forest = RandomForestRegressor(n_estimators=20, seed=0).fit(Xtr, ytr)
+    assert r2_score(yte, forest.predict(Xte)) > 0.3
+
+
+def test_mlp_regressor():
+    X, y = _linear_data(n=150, seed=14)
+    m = MLPRegressor(hidden_layer_size=32, n_layers=2, epochs=200).fit(X, y)
+    assert r2_score(y, m.predict(X)) > 0.9
+
+
+# ------------------------------------------------------------------- utilities
+def test_scaler_roundtrip_stats():
+    X = np.random.default_rng(2).normal(3.0, 2.0, size=(100, 3))
+    Xs = StandardScaler().fit_transform(X)
+    np.testing.assert_allclose(Xs.mean(axis=0), 0.0, atol=1e-9)
+    np.testing.assert_allclose(Xs.std(axis=0), 1.0, atol=1e-9)
+
+
+@given(frac=st.floats(0.1, 0.5), seed=st.integers(0, 100))
+@settings(max_examples=10)
+def test_split_partition(frac, seed):
+    X = np.arange(50, dtype=float)[:, None]
+    y = np.arange(50)
+    Xtr, Xte, ytr, yte = train_test_split(X, y, frac, seed=seed)
+    assert len(Xtr) + len(Xte) == 50
+    assert set(ytr).isdisjoint(set(yte)) or len(set(ytr) | set(yte)) == 50
+    assert sorted(np.concatenate([ytr, yte])) == list(range(50))
+
+
+def test_zoo_defaults_construct():
+    for entry in list(CLASSIFIER_ZOO.values()) + list(REGRESSOR_ZOO.values()):
+        entry["ctor"](**entry["defaults"])

@@ -1,0 +1,200 @@
+"""Tests for optimizer / data pipeline / checkpointing / trainer / server."""
+
+import json
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLMDataset
+from repro.models import init_params, model_specs
+from repro.optim import (
+    AdamWConfig,
+    apply_adamw,
+    compress_gradients,
+    cosine_schedule,
+    init_error_feedback,
+    init_opt_state,
+    linear_warmup,
+)
+from repro.train import BatchedServer, ServeConfig, TrainConfig, Trainer, make_train_step
+from repro.train.serve import Request
+from repro.train.trainer import init_train_state
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_matches_reference_math():
+    """One update on a scalar parameter vs hand-computed AdamW."""
+    cfg = AdamWConfig(learning_rate=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                      weight_decay=0.0, grad_clip_norm=0.0)
+    params = {"w": jnp.asarray(2.0)}
+    state = init_opt_state(params, cfg)
+    g = {"w": jnp.asarray(0.5)}
+    new_params, state, metrics = apply_adamw(params, g, state, cfg)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mh, vh = m / 0.1, v / 0.01
+    want = 2.0 - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    assert float(new_params["w"]) == pytest.approx(want, rel=1e-5)
+    assert int(state["step"]) == 1
+
+
+def test_adamw_clipping_and_decay():
+    cfg = AdamWConfig(learning_rate=0.1, weight_decay=0.5, grad_clip_norm=1.0)
+    params = {"w": jnp.ones(4)}
+    state = init_opt_state(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}  # norm 200 -> clipped to 1
+    new_params, _, metrics = apply_adamw(params, g, state, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    assert (np.asarray(new_params["w"]) < 1.0).all()
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(learning_rate=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray(5.0)}
+    state = init_opt_state(params, cfg)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}  # d/dw w^2
+        params, state, _ = apply_adamw(params, g, state, cfg)
+    assert abs(float(params["w"])) < 0.2
+
+
+def test_bf16_opt_state_dtype():
+    cfg = AdamWConfig(state_dtype="bfloat16")
+    state = init_opt_state({"w": jnp.ones((8,))}, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_schedules():
+    w = linear_warmup(1.0, 10)
+    assert float(w(jnp.asarray(5))) == pytest.approx(0.5)
+    c = cosine_schedule(1.0, 10, 110, final_frac=0.1)
+    assert float(c(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-2)
+    assert float(c(jnp.asarray(110))) == pytest.approx(0.1, abs=1e-2)
+
+
+def test_gradient_compression_error_feedback():
+    g = {"w": jnp.asarray(np.linspace(-1, 1, 100), jnp.float32)}
+    err = init_error_feedback(g)
+    comp, err, metrics = compress_gradients(g, err, frac=0.1)
+    density = float(metrics["compress_density"])
+    assert density <= 0.15
+    # error feedback preserves the total signal: comp + err == g
+    np.testing.assert_allclose(
+        np.asarray(comp["w"] + err["w"]), np.asarray(g["w"]), atol=1e-6
+    )
+
+
+# ----------------------------------------------------------------------- data
+def test_data_determinism_and_resume():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+    ds = SyntheticLMDataset(cfg)
+    b1, b2 = ds.batch_at(7), ds.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds.batch_at(8)["tokens"], b1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_prefetcher_orders_batches():
+    ds = SyntheticLMDataset(DataConfig(vocab_size=50, seq_len=8, global_batch=2))
+    pf = Prefetcher(ds, start_step=5)
+    steps = [pf.next()[0] for _ in range(4)]
+    pf.close()
+    assert steps == [5, 6, 7, 8]
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": [jnp.ones(4, jnp.bfloat16), jnp.asarray(2)]}
+    for step in (10, 20, 30):
+        mgr.save(step, tree, {"next_step": step})
+    assert mgr.all_steps() == [20, 30]  # keep=2 GC'd step 10
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, extra = mgr.restore(like)
+    assert extra["next_step"] == 30
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["b"][0].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomicity(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"x": jnp.ones(3)})
+    # a stale tmp dir from a crashed save must not break the next save
+    (tmp_path / "tmp_2").mkdir()
+    mgr.save(2, {"x": jnp.zeros(3)})
+    assert mgr.latest_step() == 2
+
+
+# -------------------------------------------------------------------- trainer
+def _tiny_setup(tmp_path, steps=6, compress=0.0):
+    cfg = get_config("qwen3-0.6b", reduced_config=True).replace(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+        vocab_size=128, attn_chunk=32,
+    )
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4, seed=0)
+    oc = AdamWConfig(learning_rate=3e-3, weight_decay=0.0, state_dtype="float32")
+    tc = TrainConfig(steps=steps, log_every=100, ckpt_every=3,
+                     ckpt_dir=str(tmp_path / "ckpt"), compress_frac=compress)
+    return cfg, dc, oc, tc
+
+
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    cfg, dc, oc, tc = _tiny_setup(tmp_path, steps=6)
+    trainer = Trainer(cfg, dc, oc, tc)
+    params, opt = init_train_state(cfg, oc, seed=0)
+    params, opt = trainer.run(params, opt)
+    losses = [h["loss"] for h in trainer.history]
+    assert len(losses) == 6
+    assert losses[-1] < losses[0]
+    # resume: new trainer picks up from the persisted step
+    tc2 = TrainConfig(**{**tc.__dict__, "steps": 8})
+    trainer2 = Trainer(cfg, dc, oc, tc2)
+    p2, o2 = init_train_state(cfg, oc, seed=0)
+    trainer2.run(p2, o2)
+    assert [h["step"] for h in trainer2.history] == [6, 7]
+
+
+def test_trainer_with_compression(tmp_path):
+    cfg, dc, oc, tc = _tiny_setup(tmp_path, steps=3, compress=0.25)
+    trainer = Trainer(cfg, dc, oc, tc)
+    params, opt = init_train_state(cfg, oc, seed=0, compress_frac=0.25)
+    trainer.run(params, opt)
+    assert all(np.isfinite(h["loss"]) for h in trainer.history)
+
+
+def test_preemption_checkpoint(tmp_path):
+    cfg, dc, oc, tc = _tiny_setup(tmp_path, steps=50)
+    trainer = Trainer(cfg, dc, oc, tc)
+    params, opt = init_train_state(cfg, oc, seed=0)
+    orig_step = trainer.step_fn
+
+    def step_and_preempt(p, o, b):
+        trainer._preempted = True  # simulate SIGTERM mid-run
+        return orig_step(p, o, b)
+
+    trainer.step_fn = step_and_preempt
+    trainer.run(params, opt)
+    assert len(trainer.history) == 1  # stopped immediately after the hook
+    assert trainer.ckpt.latest_step() == 1  # but saved first
+
+
+# --------------------------------------------------------------------- server
+def test_batched_server_generates():
+    cfg = get_config("qwen3-0.6b", reduced_config=True).replace(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+        vocab_size=64, attn_chunk=32,
+    )
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    server = BatchedServer(params, cfg, ServeConfig(batch_slots=2, max_len=64, max_new_tokens=5))
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=5) for i in range(3)]
+    done = server.run(reqs)
+    for r in done:
+        assert r.done and len(r.generated) == 5
+        assert all(0 <= t < cfg.vocab_size for t in r.generated)
