@@ -1,0 +1,108 @@
+"""Session-cache benchmark: cold vs warm tuning throughput (§5.3 amortization).
+
+Traffic model: a fleet repeatedly submits matrices drawn from a small pool
+(solvers re-factor the same systems). Three passes over the same request
+stream measure where the time goes:
+
+* **cold**  — fresh session, empty caches: every unique matrix pays feature
+  extraction + predictor inference + kernel specialization;
+* **warm**  — same session: plans and kernels come from the caches;
+* **reload** — new session restored from the JSON cache file (kernel memo
+  still process-warm): the restart path a serving fleet takes.
+
+Run via ``python -m benchmarks.run --only session_cache`` or directly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import ART, SCALES, get_predictor, print_table, save_result
+from repro.core import AutoSpMV, AutoSpmvSession, OverheadPredictor, measure_overheads
+from repro.kernels.ops import clear_kernel_memo
+from repro.sparse.generate import MATRIX_NAMES, generate_by_name
+
+N_UNIQUE = 5  # distinct matrices in the pool
+REPEATS = 4  # each submitted this many times -> 20 requests minimum
+
+
+def _request_stream(scale: float) -> tuple[list[np.ndarray], int]:
+    names = MATRIX_NAMES[:N_UNIQUE]
+    uniques = [generate_by_name(n, scale=scale) for n in names]
+    mats = [m for m in uniques for _ in range(REPEATS)]
+    rng = np.random.default_rng(0)
+    order = rng.permutation(len(mats))
+    return [mats[i] for i in order], len(uniques)
+
+
+def _timed_pass(session: AutoSpmvSession, mats: list[np.ndarray]) -> dict:
+    before = session.stats.as_dict()
+    t0 = time.perf_counter()
+    results = session.optimize_many(mats, "latency")
+    dt = time.perf_counter() - t0
+    after = session.stats.as_dict()
+    assert all(r is not None for r in results)
+    return {
+        "seconds": dt,
+        "matrices_per_s": len(mats) / dt,
+        "feature_extractions": after["feature_extractions"] - before["feature_extractions"],
+        "plans_computed": after["plans_computed"] - before["plans_computed"],
+        "kernel_compiles": after["kernel_compiles"] - before["kernel_compiles"],
+    }
+
+
+def run(scale_name: str = "paper", cache_path: str | None = None) -> dict:
+    s = SCALES[scale_name]
+    predictor = get_predictor(scale_name)
+    overhead = OverheadPredictor().fit(
+        [measure_overheads(generate_by_name(n, scale=s["scale"]), n)
+         for n in MATRIX_NAMES[:6]]
+    )
+    tuner = AutoSpMV(predictor, overhead)
+    mats, n_unique = _request_stream(s["scale"])
+
+    clear_kernel_memo()
+    cache_path = cache_path or str(ART / "session_cache.json")
+    cold_session = AutoSpmvSession(tuner, cache_path=None)
+    cold = _timed_pass(cold_session, mats)
+    warm = _timed_pass(cold_session, mats)
+    cold_session.cache.save(cache_path)
+
+    reload_session = AutoSpmvSession(tuner, cache_path=cache_path)
+    reload_pass = _timed_pass(reload_session, mats)
+
+    rows = [
+        ["cold", cold["seconds"], cold["matrices_per_s"], cold["feature_extractions"],
+         cold["plans_computed"], cold["kernel_compiles"]],
+        ["warm", warm["seconds"], warm["matrices_per_s"], warm["feature_extractions"],
+         warm["plans_computed"], warm["kernel_compiles"]],
+        ["reload", reload_pass["seconds"], reload_pass["matrices_per_s"],
+         reload_pass["feature_extractions"], reload_pass["plans_computed"],
+         reload_pass["kernel_compiles"]],
+    ]
+    print_table(
+        f"session cache: {len(mats)} requests over {n_unique} unique matrices",
+        ["pass", "seconds", "mat/s", "f-extract", "plans", "compiles"],
+        rows,
+    )
+    speedup = cold["seconds"] / max(warm["seconds"], 1e-9)
+    print(f"warm speedup over cold: {speedup:.1f}x "
+          f"(plan inferences {cold['plans_computed']} -> {warm['plans_computed']}, "
+          f"kernel compiles {cold['kernel_compiles']} -> {warm['kernel_compiles']})")
+
+    payload = {
+        "n_requests": len(mats),
+        "n_unique": n_unique,
+        "cold": cold,
+        "warm": warm,
+        "reload": reload_pass,
+        "warm_speedup": speedup,
+    }
+    save_result("session_cache", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run("ci")

@@ -17,6 +17,7 @@ BENCHES = [
     ("table6", "benchmarks.table6_comparison", "Table 6 vs prior-work proxies"),
     ("fig11", "benchmarks.fig11_regression", "Fig.11 objective regressors"),
     ("table7", "benchmarks.table7_overhead", "Table 7 + Fig.6 overheads"),
+    ("session_cache", "benchmarks.bench_session_cache", "Session cache cold vs warm"),
     ("fig12", "benchmarks.fig12_sensitivity", "Fig.12 hardware sensitivity"),
     ("roofline", "benchmarks.roofline", "Roofline report (dry-run artifacts)"),
 ]

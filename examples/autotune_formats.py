@@ -2,6 +2,10 @@
 per-objective format selection + conversion decisions, printed as the
 paper's Fig. 5(b) pipeline would execute inside an iterative solver.
 
+Tuning goes through ``AutoSpmvSession.optimize_many`` so the whole batch is
+deduplicated and the decisions land in a cache (pass ``--cache`` to persist
+them; a second run then starts warm and skips the predictor inferences).
+
   PYTHONPATH=src python examples/autotune_formats.py --objective efficiency
 """
 
@@ -13,6 +17,7 @@ sys.path.insert(0, "src")
 from repro.core import (
     AutoSpMV,
     AutoSpmvPredictor,
+    AutoSpmvSession,
     OverheadPredictor,
     PredictorConfig,
     collect_dataset,
@@ -28,6 +33,8 @@ def main():
     ap.add_argument("--scale", type=float, default=0.002)
     ap.add_argument("--iterations", type=int, default=2000)
     ap.add_argument("--n-matrices", type=int, default=12)
+    ap.add_argument("--cache", default=None,
+                    help="JSON path for the persistent tuning cache")
     args = ap.parse_args()
 
     names = MATRIX_NAMES[: args.n_matrices]
@@ -36,14 +43,23 @@ def main():
     oh = OverheadPredictor().fit(
         [measure_overheads(generate_by_name(m, scale=args.scale), m) for m in names[:8]]
     )
-    tuner = AutoSpMV(pred, oh)
+    session = AutoSpmvSession(AutoSpMV(pred, oh), cache_path=args.cache)
 
+    mats = [generate_by_name(m, scale=args.scale) for m in names]
+    results = session.optimize_many(
+        mats, args.objective, mode="run", n_iterations=args.iterations
+    )
     print(f"{'matrix':22s} {'format':6s} {'convert':8s} {'gain/iter':>10s} {'overhead':>9s}")
-    for m in names:
-        dense = generate_by_name(m, scale=args.scale)
-        rt = tuner.run_time_optimize(dense, args.objective, n_iterations=args.iterations)
+    for m, rt in zip(names, results):
         print(f"{m:22s} {rt.best_format:6s} {str(rt.convert):8s} "
               f"{rt.predicted_gain_per_iter:10.3g} {rt.predicted_overhead*1e3:8.1f}ms")
+    s = session.stats
+    print(f"\nsession: {s.feature_extractions} feature passes, "
+          f"{s.plans_computed} plans, {s.kernel_compiles} kernel compiles "
+          f"for {s.requests} matrices")
+    if args.cache:
+        session.save()
+        print(f"tuning cache saved to {args.cache}")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,15 @@ plus the objective models (TPU cost model + measured CPU) and the AutoML
 (HPO) stage.
 """
 
-from repro.core.autotuner import AutoSpMV, CompileTimeResult, RunTimeResult
+from repro.core.autotuner import (
+    AutoSpMV,
+    CompileTimePlan,
+    CompileTimeResult,
+    RunTimePlan,
+    RunTimeResult,
+    should_convert,
+)
+from repro.core.cache import CacheEntry, TuningCache, feature_bucket
 from repro.core.dataset import TuningDataset, TuningRecord, collect_dataset
 from repro.core.features import (
     FEATURE_NAMES,
@@ -28,6 +36,7 @@ from repro.core.objectives import (
 )
 from repro.core.overhead import OverheadPredictor, OverheadSample, measure_overheads
 from repro.core.predictor import AutoSpmvPredictor, PredictorConfig
+from repro.core.session import AutoSpmvSession, SessionStats, build_tuner
 from repro.core.tuning_space import (
     ALL_KNOBS,
     DEFAULT_CONFIG,
@@ -42,8 +51,17 @@ from repro.core.tuning_space import (
 
 __all__ = [
     "AutoSpMV",
+    "AutoSpmvSession",
+    "CacheEntry",
+    "CompileTimePlan",
     "CompileTimeResult",
+    "RunTimePlan",
     "RunTimeResult",
+    "SessionStats",
+    "TuningCache",
+    "build_tuner",
+    "feature_bucket",
+    "should_convert",
     "TuningDataset",
     "TuningRecord",
     "collect_dataset",

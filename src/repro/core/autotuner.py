@@ -12,6 +12,10 @@ Run-time mode (§5.3):
      2 model inferences);
   4. convert only if the predicted gain over the remaining iterations
      exceeds the predicted overhead.
+
+The feature->decision stage is factored out as ``plan_compile_time`` /
+``plan_run_time`` so the session layer (core/session.py) can cache plans by
+feature bucket and re-apply them without re-running the predictors.
 """
 
 from __future__ import annotations
@@ -29,6 +33,49 @@ from repro.kernels.ops import PreparedSpmv, compile_spmv
 from repro.utils.logging import get_logger
 
 log = get_logger("core.autotuner")
+
+PREDICTED_OBJECTIVES = ("latency", "energy", "power", "efficiency")
+
+
+@dataclass(frozen=True)
+class CompileTimePlan:
+    """The pure decision of compile-time mode: schedule + objective estimates.
+
+    Matrix-independent given the sparsity features — this is what the
+    session's ``TuningCache`` persists per feature bucket.
+    """
+
+    schedule: KernelSchedule
+    predicted: dict[str, float]  # estimated objective values
+
+
+@dataclass(frozen=True)
+class RunTimePlan:
+    """The pure decision of run-time mode, before the conversion gate."""
+
+    best_format: str
+    gain_per_iter: float  # objective units per kernel invocation
+    latency_gain_per_iter: float  # seconds per invocation (the gating unit)
+    overhead_s: float  # predicted f + c + o + p
+    convert_overhead_s: float = 0.0  # the c term alone (re-charged by the
+    # session when the prepared kernel is not actually memoized)
+
+
+def should_convert(
+    plan: RunTimePlan,
+    n_iterations: int,
+    current_format: str,
+    overhead_s: float | None = None,
+) -> bool:
+    """Paper §5.3 conversion gate. ``overhead_s`` overrides the plan's
+    predicted overhead — the session passes 0.0 on a cache hit because the
+    f + c + o + p cost was already paid when the plan was first computed."""
+    oh = plan.overhead_s if overhead_s is None else overhead_s
+    return (
+        plan.best_format != current_format
+        and plan.gain_per_iter > 0
+        and plan.latency_gain_per_iter * n_iterations > oh
+    )
 
 
 @dataclass(frozen=True)
@@ -55,21 +102,61 @@ class AutoSpMV:
     overhead: OverheadPredictor | None = None
     interpret: bool = True
 
+    # ------------------------------------------------------------- planning
+    def plan_compile_time(
+        self, feats: SparsityFeatures, objective: str = "latency"
+    ) -> CompileTimePlan:
+        schedule = self.predictor.predict_schedule(feats, objective)
+        predicted = {
+            obj: self.predictor.estimate_objective(
+                feats, TuningConfig("csr", schedule), obj
+            )
+            for obj in PREDICTED_OBJECTIVES
+        }
+        return CompileTimePlan(schedule, predicted)
+
+    def plan_run_time(
+        self,
+        feats: SparsityFeatures,
+        objective: str = "latency",
+        *,
+        current_format: str = "csr",
+        schedule: KernelSchedule = DEFAULT_SCHEDULE,
+    ) -> RunTimePlan:
+        best_fmt = self.predictor.predict_format(feats, objective)
+        cur = self.predictor.estimate_objective(
+            feats, TuningConfig(current_format, schedule), objective
+        )
+        new = self.predictor.estimate_objective(
+            feats, TuningConfig(best_fmt, schedule), objective
+        )
+        # gain per kernel invocation, in the objective's native unit
+        gain = (cur - new) if objective != "efficiency" else (new - cur)
+        if self.overhead is not None:
+            oh = self.overhead.total_overhead(feats, best_fmt)
+            c_term = self.overhead.predict_c(feats, best_fmt)
+        else:
+            oh = c_term = 0.0
+        # the decision rule compares time-like quantities; for non-latency
+        # objectives the paper still gates on wall-clock overhead vs the
+        # latency gain of the chosen config (§5.3) — reproduce that:
+        lat_cur = self.predictor.estimate_objective(
+            feats, TuningConfig(current_format, schedule), "latency"
+        )
+        lat_new = self.predictor.estimate_objective(
+            feats, TuningConfig(best_fmt, schedule), "latency"
+        )
+        return RunTimePlan(best_fmt, gain, lat_cur - lat_new, oh, c_term)
+
     # ------------------------------------------------------------ compile time
     def compile_time_optimize(
         self, dense: np.ndarray, objective: str = "latency"
     ) -> CompileTimeResult:
         feats = extract_features(dense)
-        schedule = self.predictor.predict_schedule(feats, objective)
-        kernel = compile_spmv(dense, "csr", schedule, interpret=self.interpret)
-        predicted = {
-            obj: self.predictor.estimate_objective(
-                feats, TuningConfig("csr", schedule), obj
-            )
-            for obj in ("latency", "energy", "power", "efficiency")
-        }
-        log.info("compile-time: %s -> %s", objective, schedule)
-        return CompileTimeResult(feats, schedule, kernel, predicted)
+        plan = self.plan_compile_time(feats, objective)
+        kernel = compile_spmv(dense, "csr", plan.schedule, interpret=self.interpret)
+        log.info("compile-time: %s -> %s", objective, plan.schedule)
+        return CompileTimeResult(feats, plan.schedule, kernel, plan.predicted)
 
     # ---------------------------------------------------------------- run time
     def run_time_optimize(
@@ -82,32 +169,12 @@ class AutoSpMV:
         schedule: KernelSchedule = DEFAULT_SCHEDULE,
     ) -> RunTimeResult:
         feats = extract_features(dense)
-        best_fmt = self.predictor.predict_format(feats, objective)
-        cur = self.predictor.estimate_objective(
-            feats, TuningConfig(current_format, schedule), objective
+        plan = self.plan_run_time(
+            feats, objective, current_format=current_format, schedule=schedule
         )
-        new = self.predictor.estimate_objective(
-            feats, TuningConfig(best_fmt, schedule), objective
-        )
-        # gain per kernel invocation, in the objective's native unit
-        gain = (cur - new) if objective != "efficiency" else (new - cur)
-        if self.overhead is not None:
-            oh = self.overhead.total_overhead(feats, best_fmt)
-        else:
-            oh = 0.0
-        # the decision rule compares time-like quantities; for non-latency
-        # objectives the paper still gates on wall-clock overhead vs the
-        # latency gain of the chosen config (§5.3) — reproduce that:
-        lat_cur = self.predictor.estimate_objective(
-            feats, TuningConfig(current_format, schedule), "latency"
-        )
-        lat_new = self.predictor.estimate_objective(
-            feats, TuningConfig(best_fmt, schedule), "latency"
-        )
-        benefit_s = (lat_cur - lat_new) * n_iterations
-        convert = best_fmt != current_format and gain > 0 and benefit_s > oh
+        convert = should_convert(plan, n_iterations, current_format)
         kernel = (
-            compile_spmv(dense, best_fmt, schedule, interpret=self.interpret)
+            compile_spmv(dense, plan.best_format, schedule, interpret=self.interpret)
             if convert
             else None
         )
@@ -115,9 +182,16 @@ class AutoSpMV:
             "run-time: obj=%s fmt %s->%s gain/iter=%.3g overhead=%.3gs convert=%s",
             objective,
             current_format,
-            best_fmt,
-            gain,
-            oh,
+            plan.best_format,
+            plan.gain_per_iter,
+            plan.overhead_s,
             convert,
         )
-        return RunTimeResult(feats, best_fmt, convert, gain, oh, kernel)
+        return RunTimeResult(
+            feats,
+            plan.best_format,
+            convert,
+            plan.gain_per_iter,
+            plan.overhead_s,
+            kernel,
+        )

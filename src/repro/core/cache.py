@@ -1,0 +1,149 @@
+"""Persistent feature-bucketed tuning cache (the session substrate).
+
+Auto-SpMV's economics (paper §5.3) only work if the tuning decision is paid
+once and amortized: the cache maps a quantized sparsity-feature *bucket* to
+the plan the predictors produced for it — the kernel schedule (compile-time
+mode) or the chosen format + gain/overhead estimates (run-time mode).
+Matrices whose Table-2 feature vectors round to the same bucket share one
+plan; since the predictors themselves only see (log-scaled) features, equal
+buckets get near-identical predictions anyway, so the cache trades an
+epsilon of decision resolution for skipping both model inferences entirely.
+
+Entries are plain JSON: ``save``/``load`` round-trips survive process
+restarts, so a serving fleet warms its schedule decisions from disk. The
+prepared Pallas kernels themselves are process-local (device buffers) and
+live in the ``kernels.ops`` keyed memo, not here.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.features import SparsityFeatures
+from repro.kernels.common import KernelSchedule
+from repro.utils.logging import get_logger
+
+log = get_logger("core.cache")
+
+CACHE_FORMAT_VERSION = 1
+
+# Bucket width in log1p feature units. 0.5 ≈ a 1.65x multiplicative band per
+# feature: coarse enough that re-generated instances of the same matrix
+# family collapse, fine enough that Fig.-7-dissimilar matrices stay apart.
+DEFAULT_BUCKET_RESOLUTION = 0.5
+
+
+def feature_bucket(
+    feats: SparsityFeatures, resolution: float = DEFAULT_BUCKET_RESOLUTION
+) -> str:
+    """Quantize the log-feature vector into a stable string key."""
+    q = np.floor(feats.log_vector() / resolution + 0.5).astype(np.int64)
+    return "b" + "_".join(str(int(v)) for v in q)
+
+
+@dataclass
+class CacheEntry:
+    """One cached tuning decision for a (bucket, objective, mode) key.
+
+    ``mode`` is ``"compile"`` or ``"run:<current_format>"`` — run-time plans
+    depend on the format currently held, so it is part of the identity.
+    """
+
+    bucket: str
+    objective: str
+    mode: str
+    fmt: str  # chosen format ("csr" in compile mode)
+    schedule: dict  # KernelSchedule.as_dict()
+    predicted: dict[str, float] = field(default_factory=dict)
+    gain_per_iter: float = 0.0
+    latency_gain_per_iter: float = 0.0
+    overhead_s: float = 0.0  # full predicted f + c + o + p at plan time
+    convert_overhead_s: float = 0.0  # the c term alone: re-charged on hits
+    # whose prepared kernel is not in the process memo (fresh process /
+    # different matrix in the same bucket)
+    hits: int = 0
+
+    def kernel_schedule(self) -> KernelSchedule:
+        return KernelSchedule(**self.schedule)
+
+
+class TuningCache:
+    """In-memory map of tuning decisions with JSON persistence."""
+
+    def __init__(self, resolution: float = DEFAULT_BUCKET_RESOLUTION):
+        self.resolution = float(resolution)
+        self._entries: dict[tuple[str, str, str], CacheEntry] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------ keys
+    def bucket_of(self, feats: SparsityFeatures) -> str:
+        return feature_bucket(feats, self.resolution)
+
+    @staticmethod
+    def _key(bucket: str, objective: str, mode: str) -> tuple[str, str, str]:
+        return (bucket, objective, mode)
+
+    # ---------------------------------------------------------------- access
+    def get(self, bucket: str, objective: str, mode: str) -> CacheEntry | None:
+        entry = self._entries.get(self._key(bucket, objective, mode))
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        entry.hits += 1
+        return entry
+
+    def put(self, entry: CacheEntry) -> CacheEntry:
+        self._entries[self._key(entry.bucket, entry.objective, entry.mode)] = entry
+        return entry
+
+    def peek(self, bucket: str, objective: str, mode: str) -> CacheEntry | None:
+        """get() without touching hit/miss accounting (for introspection)."""
+        return self._entries.get(self._key(bucket, objective, mode))
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple[str, str, str]) -> bool:
+        return key in self._entries
+
+    def entries(self) -> list[CacheEntry]:
+        return list(self._entries.values())
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = self.misses = 0
+
+    def stats(self) -> dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits, "misses": self.misses}
+
+    # ----------------------------------------------------------- persistence
+    def save(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {
+            "version": CACHE_FORMAT_VERSION,
+            "resolution": self.resolution,
+            "entries": [asdict(e) for e in self._entries.values()],
+        }
+        path.write_text(json.dumps(payload, indent=1))
+        log.info("saved %d cache entries to %s", len(self._entries), path)
+        return path
+
+    @classmethod
+    def load(cls, path: str | Path) -> "TuningCache":
+        payload = json.loads(Path(path).read_text())
+        if payload.get("version") != CACHE_FORMAT_VERSION:
+            raise ValueError(
+                f"cache version {payload.get('version')!r} != {CACHE_FORMAT_VERSION}"
+            )
+        cache = cls(resolution=payload["resolution"])
+        for raw in payload["entries"]:
+            cache.put(CacheEntry(**raw))
+        log.info("loaded %d cache entries from %s", len(cache), path)
+        return cache

@@ -1,0 +1,43 @@
+"""Ambient partition hints: ``hint(x, logical_axes)`` inside model code.
+
+Model code annotates activations with logical axes only; the concrete mesh
+and rule set come from the innermost ``sharding_context``. With no active
+context (unit tests, single-device runs) ``hint`` is the identity, so the
+same model source serves both the laptop and the fleet.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Mapping
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.dist.sharding import spec_for
+
+_CONTEXT: list[tuple[object, Mapping | None]] = []
+
+
+@contextmanager
+def sharding_context(mesh, rules: Mapping | None = None):
+    """Establish the ambient (mesh, rules) pair consumed by ``hint``."""
+    _CONTEXT.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _CONTEXT.pop()
+
+
+def current_context() -> tuple[object, Mapping | None] | None:
+    return _CONTEXT[-1] if _CONTEXT else None
+
+
+def hint(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes; identity with no context."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(mesh, tuple(x.shape), axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

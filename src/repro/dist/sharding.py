@@ -1,0 +1,127 @@
+"""Logical-axis -> mesh-axis sharding rules (FSDP + TP).
+
+The logical vocabulary is documented in ``models/param.py``. Placement:
+
+* data-like logical axes (``batch``, ``embed``) shard over every non-model
+  mesh axis, in mesh order — ``("data",)`` on a 2D mesh, ``("pod", "data")``
+  on a multi-pod mesh (ZeRO-3-style weight sharding over the full data
+  extent);
+* tensor-parallel logical axes (``vocab``, ``heads``, ``kv``, ``ffn``,
+  ``rnn``) shard over the ``model`` axis;
+* everything else (``experts``, ``layers``, ``seq``, ``None``) replicates.
+
+Two guards make the mapping total: a dimension that does not divide the
+mesh extent replicates instead (kv=8 on a 16-way model axis), and a mesh
+axis is never assigned twice in one spec (the second ``embed`` of a square
+weight replicates).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Iterable, Mapping
+
+import jax
+from jax.sharding import AbstractMesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+# logical axis -> placement class: "data" (all non-model axes), "model", or
+# None (replicated). A rule set is a plain dict so variants can override.
+TRAIN_RULES: dict[str, str | None] = {
+    "batch": "data",
+    "embed": "data",
+    "vocab": MODEL_AXIS,
+    "heads": MODEL_AXIS,
+    "kv": MODEL_AXIS,
+    "ffn": MODEL_AXIS,
+    "rnn": MODEL_AXIS,
+    "experts": None,
+    "layers": None,
+    "seq": None,
+}
+
+# Inference keeps weights TP-sharded but replicates embed (no ZeRO gather on
+# the decode path; the per-chip weight residency is paid once).
+INFER_RULES: dict[str, str | None] = dict(TRAIN_RULES, embed=None)
+
+RULE_SETS: dict[str, dict[str, str | None]] = {
+    "train": TRAIN_RULES,
+    "infer": INFER_RULES,
+}
+
+
+def abstract_mesh(axis_sizes: Iterable[int], axis_names: Iterable[str]) -> AbstractMesh:
+    """Version-compatible ``AbstractMesh`` constructor.
+
+    jax <= 0.4.x takes a single tuple of (name, size) pairs; newer releases
+    take (axis_sizes, axis_names).
+    """
+    sizes, names = tuple(axis_sizes), tuple(axis_names)
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(sizes, names)
+
+
+def _mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(mesh.shape)
+
+
+def _data_axes(mesh) -> tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n != MODEL_AXIS)
+
+
+def spec_for(
+    mesh,
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    rules: Mapping[str, str | None] | None = None,
+) -> P:
+    """PartitionSpec for one array given its logical axes.
+
+    Indivisible dims and already-used mesh axes fall back to replication;
+    trailing replicated entries are stripped so specs compare canonically.
+    """
+    rules = TRAIN_RULES if rules is None else rules
+    sizes = _mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, logical in zip(shape, axes):
+        placement = rules.get(logical) if logical is not None else None
+        if placement is None:
+            entries.append(None)
+            continue
+        names = _data_axes(mesh) if placement == "data" else (placement,)
+        names = tuple(n for n in names if n in sizes and n not in used)
+        extent = math.prod(sizes[n] for n in names) if names else 0
+        if not names or dim % extent:
+            entries.append(None)
+            continue
+        used.update(names)
+        entries.append(names if len(names) > 1 else names[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def build_sharding(mesh, spec_tree: Any, rules: Mapping | None = None) -> Any:
+    """NamedSharding tree for a ParamSpec pytree (same structure)."""
+    from repro.models.param import is_spec
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(mesh, s.shape, s.axes, rules)),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def batch_sharding(mesh, batch: Any, rules: Mapping | None = None) -> Any:
+    """Shard the leading (batch) axis of every leaf over the data axes."""
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        axes = ("batch",) + (None,) * (len(shape) - 1)
+        return NamedSharding(mesh, spec_for(mesh, shape, axes, rules))
+
+    return jax.tree.map(one, batch)

@@ -15,8 +15,15 @@ from repro.kernels.common import (
 from repro.kernels.ops import (
     InfeasibleConfig,
     PreparedSpmv,
+    clear_kernel_memo,
     compile_spmv,
+    kernel_memo_limit,
+    kernel_memo_size,
+    kernel_memo_stats,
+    kernel_memoized,
+    matrix_fingerprint,
     prepare,
+    set_kernel_memo_limit,
     spmm_pallas,
     spmv_pallas,
 )
@@ -31,8 +38,15 @@ __all__ = [
     "X_RESIDENCY_CHOICES",
     "InfeasibleConfig",
     "PreparedSpmv",
+    "clear_kernel_memo",
     "compile_spmv",
+    "kernel_memo_limit",
+    "kernel_memo_size",
+    "kernel_memo_stats",
+    "kernel_memoized",
+    "matrix_fingerprint",
     "prepare",
+    "set_kernel_memo_limit",
     "spmm_pallas",
     "spmv_pallas",
 ]

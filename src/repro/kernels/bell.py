@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import KernelSchedule
+from repro.kernels.common import CompilerParams, KernelSchedule
 
 
 def _bell_kernel(bc_ref, d_ref, x_ref, y_ref, *, accum_dtype):
@@ -68,7 +68,7 @@ def bell_spmv_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nbr, br), x_panels.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(schedule.dimension_semantics, "arbitrary"),
         ),
         interpret=interpret,

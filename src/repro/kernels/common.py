@@ -25,6 +25,11 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; kernels
+# import the alias so either jax works.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 LANE = 128
 SUBLANE = 8

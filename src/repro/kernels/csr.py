@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import KernelSchedule
+from repro.kernels.common import CompilerParams, KernelSchedule
 
 
 def _csr_kernel(d_ref, c_ref, r_ref, x_ref, y_ref, *, unroll: int, accum_dtype):
@@ -81,7 +81,7 @@ def csr_spmv_pallas(
         # whole output vector resident in VMEM across the sequential grid
         out_specs=pl.BlockSpec((n_rows + 1,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((n_rows + 1,), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",),  # carried accumulation => sequential
         ),
         interpret=interpret,

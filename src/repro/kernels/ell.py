@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import KernelSchedule
+from repro.kernels.common import CompilerParams, KernelSchedule
 
 
 def _ell_kernel(d_ref, c_ref, x_ref, y_ref, *, unroll: int, accum_dtype):
@@ -72,7 +72,7 @@ def ell_spmv_pallas(
         ],
         out_specs=pl.BlockSpec((rpb,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((R,), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(schedule.dimension_semantics, "arbitrary"),
         ),
         interpret=interpret,
@@ -121,7 +121,7 @@ def ell_spmm_pallas(
         ],
         out_specs=pl.BlockSpec((rpb, k), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, k), X.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(schedule.dimension_semantics, "arbitrary"),
         ),
         interpret=interpret,

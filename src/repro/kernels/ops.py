@@ -8,8 +8,10 @@ kernel. Alignment padding lives here so the kernels stay tile-exact.
 
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Union
+from typing import Hashable, Union
 
 import jax
 import jax.numpy as jnp
@@ -186,12 +188,100 @@ class PreparedSpmv:
         return spmv_pallas(self.mat, x, self.schedule, interpret=self.interpret)
 
 
+def matrix_fingerprint(dense: np.ndarray) -> str:
+    """Content hash of a dense-held matrix — the kernel-memo identity.
+
+    Two matrices with equal bytes/shape/dtype share every prepared kernel;
+    the session layer uses this to deduplicate batched tuning requests.
+    """
+    a = np.ascontiguousarray(np.asarray(dense))
+    h = hashlib.sha256()
+    h.update(str((a.shape, str(a.dtype))).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()[:32]
+
+
+# Process-wide LRU memo of prepared kernels, keyed by (caller key, fmt,
+# schedule, interpret). Opt-in via ``compile_spmv(..., memo_key=...)`` so
+# one-off callers don't pin large format storage. Bounded: each entry holds
+# the full converted matrix storage, so an unbounded memo on a serving path
+# streaming distinct matrices would grow RSS until OOM.
+_KERNEL_MEMO: "OrderedDict[tuple, PreparedSpmv]" = OrderedDict()
+_MEMO_STATS = {"hits": 0, "compiles": 0, "evictions": 0}
+_MEMO_LIMIT = 256
+
+
+def kernel_memo_stats() -> dict[str, int]:
+    """Copy of the process-wide memo counters (hits / compiles / evictions)."""
+    return dict(_MEMO_STATS)
+
+
+def kernel_memo_size() -> int:
+    return len(_KERNEL_MEMO)
+
+
+def kernel_memo_limit() -> int:
+    return _MEMO_LIMIT
+
+
+def set_kernel_memo_limit(limit: int) -> None:
+    """Resize the LRU bound (evicts immediately if shrinking)."""
+    global _MEMO_LIMIT
+    if limit < 1:
+        raise ValueError("kernel memo limit must be >= 1")
+    _MEMO_LIMIT = limit
+    while len(_KERNEL_MEMO) > _MEMO_LIMIT:
+        _KERNEL_MEMO.popitem(last=False)
+        _MEMO_STATS["evictions"] += 1
+
+
+def kernel_memoized(
+    memo_key: Hashable,
+    fmt: str,
+    schedule: KernelSchedule = DEFAULT_SCHEDULE,
+    *,
+    interpret: bool = True,
+) -> bool:
+    """Whether ``compile_spmv`` with these arguments would be a memo hit.
+
+    Lets the session's amortized-overhead accounting charge the conversion
+    term only when conversion will actually run."""
+    return (memo_key, fmt, schedule, interpret) in _KERNEL_MEMO
+
+
+def clear_kernel_memo() -> None:
+    _KERNEL_MEMO.clear()
+
+
 def compile_spmv(
     dense: np.ndarray,
     fmt: str,
     schedule: KernelSchedule = DEFAULT_SCHEDULE,
     *,
     interpret: bool = True,
+    memo_key: Hashable | None = None,
 ) -> PreparedSpmv:
-    """prepare + bind: the full compile-time-mode product."""
-    return PreparedSpmv(prepare(dense, fmt, schedule), schedule, interpret)
+    """prepare + bind: the full compile-time-mode product.
+
+    With ``memo_key`` (typically ``matrix_fingerprint(dense)``) the prepared
+    kernel is memoized process-wide: repeated compilation requests for the
+    same (matrix, format, schedule) return the existing ``PreparedSpmv``
+    without re-running conversion — the ``c`` term of the §5.3 overhead
+    model is paid once per unique matrix (until LRU eviction)."""
+    if memo_key is not None:
+        key = (memo_key, fmt, schedule, interpret)
+        hit = _KERNEL_MEMO.get(key)
+        if hit is not None:
+            _MEMO_STATS["hits"] += 1
+            _KERNEL_MEMO.move_to_end(key)
+            return hit
+    prepared = PreparedSpmv(prepare(dense, fmt, schedule), schedule, interpret)
+    if memo_key is not None:
+        # counters cover memoized traffic only, so hits/(hits+compiles) is a
+        # true memo hit rate (plain one-off compiles don't skew it)
+        _MEMO_STATS["compiles"] += 1
+        _KERNEL_MEMO[key] = prepared
+        while len(_KERNEL_MEMO) > _MEMO_LIMIT:
+            _KERNEL_MEMO.popitem(last=False)
+            _MEMO_STATS["evictions"] += 1
+    return prepared

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import KernelSchedule
+from repro.kernels.common import CompilerParams, KernelSchedule
 
 
 def _sell_kernel(
@@ -98,7 +98,7 @@ def sell_spmv_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_slices, C), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=(schedule.dimension_semantics, "arbitrary"),
         ),
         interpret=interpret,

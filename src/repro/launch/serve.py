@@ -1,35 +1,43 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>`` (LM mode)
+or ``python -m repro.launch.serve --spmv [--spmv-cache tuning.json]`` (SpMV
+mode).
 
-Runs the batched continuous-batching-lite server on synthetic requests with
-a reduced config (CPU container); the production path is exercised through
-the decode/prefill dry-run cells.
+LM mode runs the batched continuous-batching-lite server on synthetic
+requests with a reduced config (CPU container); the production path is
+exercised through the decode/prefill dry-run cells.
+
+SpMV mode runs the multi-matrix Auto-SpMV pipeline: synthetic traffic drawn
+from the paper's matrix suite (with repeats, as real solver fleets resubmit
+the same systems) flows through an ``AutoSpmvSession``-backed ``SpmvServer``.
+With ``--spmv-cache`` the tuning decisions persist to JSON, so a relaunched
+server starts warm and skips the predictor inferences.
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.session import AutoSpmvSession, build_tuner
 from repro.models import init_params, model_specs
-from repro.train.serve import BatchedServer, Request, ServeConfig
+from repro.sparse.generate import MATRIX_NAMES, generate_by_name
+from repro.train.serve import (
+    BatchedServer,
+    Request,
+    ServeConfig,
+    SpmvRequest,
+    SpmvServer,
+)
 from repro.utils.logging import get_logger
 
 log = get_logger("launch.serve")
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True, choices=sorted(ARCH_IDS))
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new-tokens", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
+def serve_lm(args) -> list[Request]:
     cfg = get_config(args.arch, reduced_config=True)
     if cfg.prefix_len:
         cfg = cfg.replace(prefix_len=0, prefix_lm=False)  # text-only serving demo
@@ -54,6 +62,72 @@ def main(argv=None):
     tput = sum(len(r.generated) for r in done) / max(done[0].latency_s, 1e-9)
     log.info("aggregate throughput: %.1f tok/s over %d requests", tput, len(done))
     return done
+
+
+def serve_spmv(args) -> list[SpmvRequest]:
+    t0 = time.time()
+    tuner = build_tuner(
+        scale=args.spmv_scale, names=MATRIX_NAMES[: args.spmv_train_matrices]
+    )
+    log.info("tuner ready in %.1fs", time.time() - t0)
+    session = AutoSpmvSession(tuner, cache_path=args.spmv_cache)
+    if len(session.cache):
+        log.info("warm start: %d cached plans from %s", len(session.cache), args.spmv_cache)
+    server = SpmvServer(session)
+
+    # synthetic traffic: suite matrices with repeats (fleet-like resubmission)
+    rng = np.random.default_rng(args.seed)
+    pool = MATRIX_NAMES[: max(args.requests // 4, 2)]
+    reqs = []
+    for i in range(args.requests):
+        dense = generate_by_name(str(rng.choice(pool)), scale=args.spmv_scale)
+        x = rng.normal(size=dense.shape[1]).astype(np.float32)
+        reqs.append(SpmvRequest(rid=i, dense=dense, x=x, objective=args.objective))
+    done = server.run(reqs)
+
+    for r in done:
+        ref = r.dense @ r.x
+        err = np.abs(r.y - ref).max() / (np.abs(ref).max() + 1e-9)
+        log.info("req %d: hit=%s rel.err=%.2e %s", r.rid, r.cache_hit, err, r.schedule)
+    stats = session.stats
+    log.info(
+        "served %d requests with %d feature passes, %d plans, %d kernel compiles; cache %s",
+        len(done),
+        stats.feature_extractions,
+        stats.plans_computed,
+        stats.kernel_compiles,
+        session.cache.stats(),
+    )
+    if args.spmv_cache:
+        session.save()
+        log.info("tuning cache saved to %s", args.spmv_cache)
+    return done
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=sorted(ARCH_IDS),
+                    help="LM mode: model architecture to serve")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spmv", action="store_true",
+                    help="serve SpMV traffic through an AutoSpmvSession")
+    ap.add_argument("--spmv-cache", default=None,
+                    help="JSON path for the persistent tuning cache")
+    ap.add_argument("--spmv-scale", type=float, default=0.0015)
+    ap.add_argument("--spmv-train-matrices", type=int, default=8)
+    ap.add_argument("--objective", default="latency",
+                    choices=["latency", "energy", "power", "efficiency"])
+    args = ap.parse_args(argv)
+
+    if args.spmv:
+        return serve_spmv(args)
+    if args.arch is None:
+        ap.error("--arch is required unless --spmv is given")
+    return serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,363 @@
+"""Tests for the autotuning session layer: TuningCache semantics, batched
+dedup in optimize_many, save/load warm restarts, and the amortized-overhead
+conversion decision (paper §5.3 paid-once economics)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoSpMV,
+    AutoSpmvPredictor,
+    AutoSpmvSession,
+    CacheEntry,
+    OverheadPredictor,
+    PredictorConfig,
+    TuningCache,
+    collect_dataset,
+    extract_features,
+    feature_bucket,
+    measure_overheads,
+)
+from repro.kernels.common import DEFAULT_SCHEDULE
+from repro.kernels.ops import clear_kernel_memo, kernel_memo_stats
+from repro.sparse.generate import MATRIX_NAMES, generate_by_name, random_matrix
+
+SCALE = 0.0015
+N_UNIQUE = 5
+
+
+# --------------------------------------------------------------------- fakes
+class _FakePredictor:
+    """Deterministic predictor: 'ell' always wins by 2x on every objective."""
+
+    def predict_format(self, feats, objective):
+        return "ell"
+
+    def predict_schedule(self, feats, objective):
+        return DEFAULT_SCHEDULE
+
+    def estimate_objective(self, feats, config, objective):
+        return 0.5 if config.fmt == "ell" else 1.0
+
+
+class _FakeOverhead:
+    def __init__(self, total: float, c: float = 1.0):
+        self.total = total
+        self.c = c
+
+    def total_overhead(self, feats, fmt):
+        return self.total
+
+    def predict_c(self, feats, fmt):
+        return self.c
+
+
+@pytest.fixture
+def fake_tuner():
+    return AutoSpMV(_FakePredictor(), _FakeOverhead(total=1e6, c=1.0))
+
+
+@pytest.fixture(scope="module")
+def real_tuner():
+    ds = collect_dataset(scale=SCALE, names=MATRIX_NAMES[:6], n_extra=2)
+    pred = AutoSpmvPredictor(PredictorConfig(max_regressor_samples=1000)).fit(ds)
+    oh = OverheadPredictor().fit(
+        [measure_overheads(generate_by_name(n, scale=SCALE), n)
+         for n in MATRIX_NAMES[:6]]
+    )
+    return AutoSpMV(pred, oh)
+
+
+def _unique_mats():
+    """N_UNIQUE matrices engineered to land in distinct feature buckets."""
+    mats = [
+        random_matrix(96 * (i + 1), 4.0 * (i + 1), "fem", seed=i)
+        for i in range(N_UNIQUE)
+    ]
+    buckets = {feature_bucket(extract_features(m)) for m in mats}
+    assert len(buckets) == N_UNIQUE, "test matrices must span distinct buckets"
+    return mats
+
+
+# --------------------------------------------------------------- TuningCache
+def test_feature_bucket_stable_and_discriminative():
+    a = random_matrix(128, 6.0, "fem", seed=0)
+    same = feature_bucket(extract_features(a))
+    assert same == feature_bucket(extract_features(a.copy()))
+    b = random_matrix(512, 24.0, "powerlaw", seed=1)
+    assert feature_bucket(extract_features(b)) != same
+
+
+def test_cache_hit_miss_accounting():
+    cache = TuningCache()
+    assert cache.get("b1", "latency", "compile") is None
+    assert cache.stats() == {"entries": 0, "hits": 0, "misses": 1}
+    entry = CacheEntry(
+        bucket="b1", objective="latency", mode="compile",
+        fmt="csr", schedule=DEFAULT_SCHEDULE.as_dict(),
+    )
+    cache.put(entry)
+    got = cache.get("b1", "latency", "compile")
+    assert got is entry and got.hits == 1
+    assert got.kernel_schedule() == DEFAULT_SCHEDULE
+    # different objective / mode are distinct keys
+    assert cache.get("b1", "energy", "compile") is None
+    assert cache.get("b1", "latency", "run:csr") is None
+    assert cache.stats()["hits"] == 1 and cache.stats()["misses"] == 3
+
+
+def test_cache_save_load_roundtrip(tmp_path):
+    cache = TuningCache(resolution=0.25)
+    cache.put(CacheEntry(
+        bucket="b1", objective="latency", mode="compile", fmt="csr",
+        schedule=DEFAULT_SCHEDULE.as_dict(), predicted={"latency": 1.5},
+    ))
+    cache.put(CacheEntry(
+        bucket="b2", objective="energy", mode="run:csr", fmt="ell",
+        schedule=DEFAULT_SCHEDULE.as_dict(),
+        gain_per_iter=0.5, latency_gain_per_iter=1e-6, overhead_s=0.02,
+    ))
+    p = cache.save(tmp_path / "cache.json")
+    loaded = TuningCache.load(p)
+    assert loaded.resolution == 0.25 and len(loaded) == 2
+    e = loaded.peek("b2", "energy", "run:csr")
+    assert e.fmt == "ell" and e.overhead_s == pytest.approx(0.02)
+    assert loaded.peek("b1", "latency", "compile").predicted == {"latency": 1.5}
+
+
+def test_cache_load_rejects_unknown_version(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text('{"version": 999, "resolution": 0.5, "entries": []}')
+    with pytest.raises(ValueError):
+        TuningCache.load(p)
+
+
+# ------------------------------------------------------------------- session
+def test_compile_time_hit_skips_planning(fake_tuner):
+    session = AutoSpmvSession(fake_tuner)
+    dense = random_matrix(128, 6.0, "fem", seed=0)
+    r1 = session.compile_time_optimize(dense)
+    r2 = session.compile_time_optimize(dense.copy())  # same bytes, new array
+    assert session.stats.plans_computed == 1
+    assert session.stats.feature_extractions == 1  # fingerprint memo
+    assert session.stats.cache_hits == 1 and session.stats.cache_misses == 1
+    assert r1.schedule == r2.schedule
+    assert r2.kernel is r1.kernel  # process-wide kernel memo
+
+
+def test_optimize_many_dedup_exact_pass_counts(fake_tuner):
+    """The acceptance criterion: 20 matrices over 5 buckets -> exactly 5
+    feature-extraction passes and 5 kernel-compile passes."""
+    clear_kernel_memo()
+    session = AutoSpmvSession(fake_tuner)
+    uniques = _unique_mats()
+    mats = [m for m in uniques for _ in range(4)]  # 20 requests
+    rng = np.random.default_rng(0)
+    mats = [mats[i] for i in rng.permutation(len(mats))]
+    results = session.optimize_many(mats, "latency")
+    assert len(results) == 20
+    assert session.stats.requests == 20
+    assert session.stats.feature_extractions == N_UNIQUE
+    assert session.stats.kernel_compiles == N_UNIQUE
+    assert session.stats.plans_computed == N_UNIQUE  # buckets are distinct
+    # kernels fan back out: a repeated matrix gets the identical kernel object
+    by_fp = {}
+    for m, r in zip(mats, results):
+        key = m.tobytes()
+        by_fp.setdefault(key, r)
+        assert r.kernel is by_fp[key].kernel
+
+
+def test_optimize_many_matches_per_matrix_autospmv(real_tuner):
+    """Batched results must agree with one-at-a-time AutoSpMV decisions."""
+    mats = [generate_by_name(n, scale=SCALE) for n in MATRIX_NAMES[:4]]
+    session = AutoSpmvSession(real_tuner)
+    batched = session.optimize_many(mats, "latency")
+    for dense, got in zip(mats, batched):
+        solo = real_tuner.compile_time_optimize(dense, "latency")
+        assert got.schedule == solo.schedule
+        assert got.predicted == pytest.approx(solo.predicted)
+        x = np.random.default_rng(0).normal(size=dense.shape[1]).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(got.kernel(x)), np.asarray(solo.kernel(x)), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_optimize_many_run_mode(fake_tuner):
+    session = AutoSpmvSession(fake_tuner)
+    mats = _unique_mats()[:2] * 2
+    results = session.optimize_many(
+        mats, "latency", mode="run", n_iterations=10
+    )
+    assert len(results) == 4
+    assert all(r.best_format == "ell" for r in results)
+    with pytest.raises(ValueError):
+        session.optimize_many(mats, mode="batch")
+
+
+def test_warm_reload_answers_without_recompiling(fake_tuner, tmp_path):
+    """A session restored from disk must serve compile_time_optimize from
+    the plan cache + kernel memo: no predictor inference, no re-compile."""
+    dense = random_matrix(160, 8.0, "banded", seed=3)
+    path = tmp_path / "session.json"
+    first = AutoSpmvSession(fake_tuner, cache_path=path)
+    r1 = first.compile_time_optimize(dense)
+    first.save()
+
+    warm = AutoSpmvSession(fake_tuner, cache_path=path)
+    assert len(warm.cache) == 1
+    compiles_before = kernel_memo_stats()["compiles"]
+    r2 = warm.compile_time_optimize(dense)
+    assert warm.stats.plans_computed == 0  # plan from disk
+    assert kernel_memo_stats()["compiles"] == compiles_before  # kernel from memo
+    assert r2.schedule == r1.schedule and r2.kernel is r1.kernel
+
+
+def test_save_requires_path(fake_tuner):
+    with pytest.raises(ValueError):
+        AutoSpmvSession(fake_tuner).save()
+
+
+# -------------------------------------------------- amortized overhead (§5.3)
+def test_amortized_overhead_flips_convert_decision(fake_tuner):
+    """Cold call: the predicted f+c+o+p overhead (1e6 s) swamps the gain ->
+    keep CSR. Warm call on the same bucket: the decision terms were already
+    paid, only the conversion term (1 s, kernel not yet memoized) is charged
+    -> convert to the predicted winner. Third call: kernel memoized, zero
+    marginal overhead."""
+    clear_kernel_memo()
+    session = AutoSpmvSession(fake_tuner)
+    dense = random_matrix(128, 6.0, "fem", seed=7)
+    cold = session.run_time_optimize(dense, n_iterations=100)
+    assert not cold.convert and cold.kernel is None
+    assert cold.predicted_overhead == pytest.approx(1e6)
+
+    warm = session.run_time_optimize(dense, n_iterations=100)
+    assert warm.convert and warm.kernel is not None
+    assert warm.best_format == "ell"
+    assert warm.predicted_overhead == pytest.approx(1.0)  # c term only
+    assert session.stats.overhead_paid_s == pytest.approx(1e6)
+    assert session.stats.overhead_saved_s == pytest.approx(1e6 - 1.0)
+
+    third = session.run_time_optimize(dense, n_iterations=100)
+    assert third.convert and third.predicted_overhead == 0.0  # kernel memoized
+
+
+def test_plan_miss_credits_already_memoized_kernel(fake_tuner):
+    """A plan-cache miss for a *new objective* on a matrix whose converted
+    kernel is already memoized must not re-charge the conversion term."""
+    clear_kernel_memo()
+    session = AutoSpmvSession(fake_tuner)
+    dense = random_matrix(128, 6.0, "fem", seed=13)
+    # converts on the warm (2nd) latency call -> ell kernel becomes memoized
+    session.run_time_optimize(dense, "latency", n_iterations=100)
+    warm = session.run_time_optimize(dense, "latency", n_iterations=100)
+    assert warm.convert
+    paid_before = session.stats.overhead_paid_s
+    miss = session.run_time_optimize(dense, "energy", n_iterations=100)
+    assert miss.predicted_overhead == pytest.approx(1e6 - 1.0)  # c credited
+    assert session.stats.overhead_paid_s - paid_before == pytest.approx(1e6 - 1.0)
+
+
+def test_reloaded_session_still_charges_conversion(fake_tuner, tmp_path):
+    """After a JSON reload in a *fresh process* (kernel memo empty), a plan
+    hit must still charge the c term: a 1-iteration workload whose gain
+    cannot cover conversion must not convert."""
+    clear_kernel_memo()
+    path = tmp_path / "cache.json"
+    dense = random_matrix(128, 6.0, "fem", seed=11)
+    # gain/iter is 0.5 s (fake predictor); make conversion cost 10 s
+    tuner = AutoSpMV(_FakePredictor(), _FakeOverhead(total=1e6, c=10.0))
+    first = AutoSpmvSession(tuner, cache_path=path)
+    first.run_time_optimize(dense, n_iterations=1)
+    first.save()
+
+    clear_kernel_memo()  # simulate process restart
+    warm = AutoSpmvSession(tuner, cache_path=path)
+    few = warm.run_time_optimize(dense, n_iterations=1)
+    assert not few.convert  # 0.5 * 1 < 10: conversion still costs real time
+    assert few.predicted_overhead == pytest.approx(10.0)
+    many = warm.run_time_optimize(dense, n_iterations=1000)
+    assert many.convert  # 0.5 * 1000 > 10
+
+
+def test_kernel_memo_lru_bound():
+    from repro.kernels.ops import (
+        kernel_memo_size,
+        kernel_memo_stats,
+        set_kernel_memo_limit,
+    )
+    from repro.kernels.ops import compile_spmv
+
+    clear_kernel_memo()
+    old_limit = None
+    try:
+        from repro.kernels import ops
+
+        old_limit = ops.kernel_memo_limit()
+        set_kernel_memo_limit(2)
+        mats = [random_matrix(96, 4.0, "fem", seed=s) for s in range(3)]
+        for i, m in enumerate(mats):
+            compile_spmv(m, "csr", DEFAULT_SCHEDULE, memo_key=f"m{i}")
+        assert kernel_memo_size() == 2  # oldest evicted
+        assert kernel_memo_stats()["evictions"] >= 1
+        evictions = kernel_memo_stats()["evictions"]
+        compile_spmv(mats[0], "csr", DEFAULT_SCHEDULE, memo_key="m0")  # re-compile
+        assert kernel_memo_stats()["evictions"] == evictions + 1
+    finally:
+        if old_limit is not None:
+            set_kernel_memo_limit(old_limit)
+        clear_kernel_memo()
+
+
+def test_run_time_cold_matches_unwrapped_tuner(real_tuner):
+    dense = generate_by_name(MATRIX_NAMES[0], scale=SCALE)
+    session = AutoSpmvSession(real_tuner)
+    wrapped = session.run_time_optimize(dense, "efficiency", n_iterations=1000)
+    direct = real_tuner.run_time_optimize(dense, "efficiency", n_iterations=1000)
+    assert wrapped.best_format == direct.best_format
+    assert wrapped.convert == direct.convert
+    assert wrapped.predicted_gain_per_iter == pytest.approx(
+        direct.predicted_gain_per_iter
+    )
+    assert wrapped.predicted_overhead == pytest.approx(direct.predicted_overhead)
+
+
+def test_run_mode_key_distinguishes_current_format(fake_tuner):
+    """Plans are cached per held format: tuning from 'ell' must not reuse
+    the from-'csr' plan (the gain baseline differs)."""
+    session = AutoSpmvSession(fake_tuner)
+    dense = random_matrix(128, 6.0, "fem", seed=9)
+    session.run_time_optimize(dense, current_format="csr", n_iterations=10)
+    assert session.stats.plans_computed == 1
+    session.run_time_optimize(dense, current_format="ell", n_iterations=10)
+    assert session.stats.plans_computed == 2  # distinct cache key -> new plan
+    session.run_time_optimize(dense, current_format="ell", n_iterations=10)
+    assert session.stats.plans_computed == 2  # now cached
+
+
+# ----------------------------------------------------------------- SpmvServer
+def test_spmv_server_batches_and_reuses(fake_tuner):
+    from repro.train.serve import SpmvRequest, SpmvServer
+
+    session = AutoSpmvSession(fake_tuner)
+    server = SpmvServer(session)
+    uniques = _unique_mats()[:3]
+    rng = np.random.default_rng(1)
+
+    def batch(rid0):
+        reqs = []
+        for i, m in enumerate(uniques):
+            x = rng.normal(size=m.shape[1]).astype(np.float32)
+            reqs.append(SpmvRequest(rid=rid0 + i, dense=m, x=x))
+        return reqs
+
+    first = server.run(batch(0))
+    assert all(not r.cache_hit for r in first)
+    second = server.run(batch(10))
+    assert all(r.cache_hit for r in second)
+    assert session.stats.plans_computed == 3  # nothing re-planned
+    for r in first + second:
+        ref = r.dense @ r.x
+        err = np.abs(r.y - ref).max() / (np.abs(ref).max() + 1e-9)
+        assert err < 1e-3
