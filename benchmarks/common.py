@@ -27,6 +27,7 @@ ART = Path(os.environ.get("REPRO_BENCH_DIR", "artifacts/bench"))
 
 SCALES = {
     # matrix_scale, n_matrices, n_extra, regressor_samples
+    "smoke": dict(scale=0.0008, names=MATRIX_NAMES[:4], n_extra=0, reg_samples=300),
     "ci": dict(scale=0.0012, names=MATRIX_NAMES[:10], n_extra=4, reg_samples=800),
     "paper": dict(scale=0.002, names=MATRIX_NAMES, n_extra=12, reg_samples=2500),
 }

@@ -1,5 +1,9 @@
 """Benchmark orchestrator: one module per paper table/figure + the roofline
 report. ``python -m benchmarks.run [--scale ci|paper] [--only fig9,table5]``.
+
+``--smoke`` is the sub-minute CI tier: only the benches tagged smoke-capable
+(the session-cache and adaptive-telemetry ones, which skip dataset-wide
+predictor sweeps) at the smallest scale.
 """
 
 from __future__ import annotations
@@ -18,17 +22,28 @@ BENCHES = [
     ("fig11", "benchmarks.fig11_regression", "Fig.11 objective regressors"),
     ("table7", "benchmarks.table7_overhead", "Table 7 + Fig.6 overheads"),
     ("session_cache", "benchmarks.bench_session_cache", "Session cache cold vs warm"),
+    ("adaptive", "benchmarks.bench_adaptive", "Telemetry bandit misprediction recovery"),
     ("fig12", "benchmarks.fig12_sensitivity", "Fig.12 hardware sensitivity"),
     ("roofline", "benchmarks.roofline", "Roofline report (dry-run artifacts)"),
 ]
 
+SMOKE_BENCHES = ("session_cache", "adaptive")
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--scale", choices=["ci", "paper"], default="paper")
+    ap.add_argument("--scale", choices=["smoke", "ci", "paper"], default="paper")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="sub-minute tier: smoke benches at the smallest scale")
     args = ap.parse_args(argv)
-    only = set(args.only.split(",")) if args.only else None
+    scale = "smoke" if args.smoke else args.scale
+    if args.only:
+        only = set(args.only.split(","))
+    elif args.smoke:
+        only = set(SMOKE_BENCHES)
+    else:
+        only = None
 
     failures = []
     t_all = time.time()
@@ -41,10 +56,7 @@ def main(argv=None) -> int:
             import importlib
 
             mod = importlib.import_module(module)
-            if name == "roofline":
-                mod.run(args.scale)
-            else:
-                mod.run(args.scale)
+            mod.run(scale)
             print(f"[{name}] done in {time.time()-t0:.1f}s")
         except Exception:
             traceback.print_exc()

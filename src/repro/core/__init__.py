@@ -36,7 +36,12 @@ from repro.core.objectives import (
 )
 from repro.core.overhead import OverheadPredictor, OverheadSample, measure_overheads
 from repro.core.predictor import AutoSpmvPredictor, PredictorConfig
-from repro.core.session import AutoSpmvSession, SessionStats, build_tuner
+from repro.core.session import (
+    AutoSpmvSession,
+    ServedPlan,
+    SessionStats,
+    build_tuner,
+)
 from repro.core.tuning_space import (
     ALL_KNOBS,
     DEFAULT_CONFIG,
@@ -57,6 +62,7 @@ __all__ = [
     "CompileTimeResult",
     "RunTimePlan",
     "RunTimeResult",
+    "ServedPlan",
     "SessionStats",
     "TuningCache",
     "build_tuner",

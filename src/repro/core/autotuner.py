@@ -101,6 +101,9 @@ class AutoSpMV:
     predictor: AutoSpmvPredictor
     overhead: OverheadPredictor | None = None
     interpret: bool = True
+    dataset: object | None = None  # the §5.4 TuningDataset the predictor was
+    # fit on, when the builder kept it — telemetry refits merge its labels so
+    # a handful of fleet measurements never erase offline coverage
 
     # ------------------------------------------------------------- planning
     def plan_compile_time(

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.features import SparsityFeatures
 from repro.kernels.common import KernelSchedule
+from repro.utils.io import atomic_write_text
 from repro.utils.logging import get_logger
 
 log = get_logger("core.cache")
@@ -115,6 +116,38 @@ class TuningCache:
     def entries(self) -> list[CacheEntry]:
         return list(self._entries.values())
 
+    def invalidate(
+        self,
+        bucket: str,
+        objective: str | None = None,
+        mode: str | None = None,
+    ) -> int:
+        """Drop entries matching ``bucket`` (and, if given, objective/mode).
+
+        The telemetry layer's drift detector calls this when measured
+        behavior contradicts a cached plan: the stale decision is evicted so
+        the next request re-plans against the (refit) predictors. Returns
+        the number of entries removed.
+        """
+        doomed = [
+            k
+            for k in self._entries
+            if k[0] == bucket
+            and (objective is None or k[1] == objective)
+            and (mode is None or k[2] == mode)
+        ]
+        for k in doomed:
+            del self._entries[k]
+        if doomed:
+            log.info(
+                "invalidated %d plan(s) for bucket=%s objective=%s mode=%s",
+                len(doomed),
+                bucket,
+                objective or "*",
+                mode or "*",
+            )
+        return len(doomed)
+
     def clear(self) -> None:
         self._entries.clear()
         self.hits = self.misses = 0
@@ -125,13 +158,14 @@ class TuningCache:
     # ----------------------------------------------------------- persistence
     def save(self, path: str | Path) -> Path:
         path = Path(path)
-        path.parent.mkdir(parents=True, exist_ok=True)
         payload = {
             "version": CACHE_FORMAT_VERSION,
             "resolution": self.resolution,
             "entries": [asdict(e) for e in self._entries.values()],
         }
-        path.write_text(json.dumps(payload, indent=1))
+        # temp file + os.replace: an interrupted save must not corrupt the
+        # cache a restarting fleet would otherwise warm from
+        atomic_write_text(path, json.dumps(payload, indent=1))
         log.info("saved %d cache entries to %s", len(self._entries), path)
         return path
 

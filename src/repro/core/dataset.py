@@ -31,6 +31,7 @@ from repro.core.objectives import (
 )
 from repro.core.tuning_space import TuningConfig, full_space
 from repro.sparse.generate import MATRIX_NAMES, PATTERN_NAMES, generate_by_name, random_matrix
+from repro.utils.io import atomic_write_text
 from repro.utils.logging import get_logger
 
 log = get_logger("core.dataset")
@@ -98,7 +99,6 @@ class TuningDataset:
     # --- serialization -------------------------------------------------------
     def save(self, path: str | Path) -> None:
         path = Path(path)
-        path.parent.mkdir(parents=True, exist_ok=True)
         rows = []
         for r in self.records:
             row = {
@@ -113,7 +113,7 @@ class TuningDataset:
                 "source": r.source,
             }
             rows.append(row)
-        path.write_text(json.dumps({"meta": self.meta, "records": rows}))
+        atomic_write_text(path, json.dumps({"meta": self.meta, "records": rows}))
 
     @classmethod
     def load(cls, path: str | Path) -> "TuningDataset":

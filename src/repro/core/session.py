@@ -21,6 +21,14 @@ bucket was first tuned; the conversion term ``c`` is charged only when the
 prepared kernel is actually absent from the process-wide kernel memo (fresh
 process after a JSON reload, LRU eviction, or a different matrix landing in
 the same feature bucket) — the gate always sees the true marginal cost.
+
+Telemetry hooks (repro/telemetry): a session optionally carries a
+``TelemetryRecorder`` and an ``AdaptiveFormatSelector``. ``serve_optimize``
+consults the bandit for the format to serve (the cached plan is the
+incumbent arm), ``observe`` feeds measured wall times back, and a sustained
+drift verdict invalidates the stale cache entries so the next request
+re-plans. Both collaborators are duck-typed — the session never imports the
+telemetry package, so ``repro.core`` stays import-cycle-free.
 """
 
 from __future__ import annotations
@@ -47,6 +55,7 @@ from repro.kernels.ops import (
     kernel_memoized,
     matrix_fingerprint,
 )
+from repro.sparse.formats import FORMAT_NAMES
 from repro.utils.logging import get_logger
 
 log = get_logger("core.session")
@@ -64,6 +73,9 @@ class SessionStats:
     cache_misses: int = 0
     overhead_paid_s: float = 0.0  # predicted overhead charged on misses
     overhead_saved_s: float = 0.0  # predicted overhead skipped on hits
+    observations: int = 0  # measured executions fed back via observe()
+    explorations: int = 0  # bandit pulls served off the incumbent plan
+    invalidations: int = 0  # drift-triggered cache evictions
 
     def as_dict(self) -> dict:
         return {
@@ -75,6 +87,9 @@ class SessionStats:
             "cache_misses": self.cache_misses,
             "overhead_paid_s": self.overhead_paid_s,
             "overhead_saved_s": self.overhead_saved_s,
+            "observations": self.observations,
+            "explorations": self.explorations,
+            "invalidations": self.invalidations,
         }
 
 
@@ -85,6 +100,28 @@ def _run_mode_key(current_format: str, schedule: KernelSchedule) -> str:
         return f"run:{current_format}"
     tag = "_".join(f"{k}={v}" for k, v in sorted(schedule.as_dict().items()))
     return f"run:{current_format}:{tag}"
+
+
+@dataclass(frozen=True)
+class ServedPlan:
+    """What ``serve_optimize`` hands the serving layer: the plan actually
+    served this request, with enough identity for ``observe`` to attribute
+    the measured outcome back to the right telemetry arm."""
+
+    fingerprint: str
+    features: SparsityFeatures
+    bucket: str
+    objective: str
+    fmt: str  # format served (bandit may diverge from the cached plan)
+    schedule: KernelSchedule
+    kernel: object  # PreparedSpmv
+    predicted: dict  # model objective estimates for the cached plan
+    plan_id: str  # "bucket/objective/mode" string for the telemetry log
+    exploratory: bool = False  # this pull was bandit exploration
+    cache_hit: bool = False  # the schedule plan pre-existed this request
+    predicted_s: float | None = None  # model latency estimate for the SERVED
+    # format (drift detection compares measured against this, not against
+    # the csr compile-plan estimate)
 
 
 class AutoSpmvSession:
@@ -100,6 +137,13 @@ class AutoSpmvSession:
     cache_path:
         Optional JSON path. If the file exists the cache is warmed from it;
         ``save()`` writes back to the same path by default.
+    telemetry:
+        Optional ``repro.telemetry.TelemetryRecorder`` (duck-typed);
+        ``observe`` forwards measured outcomes to it.
+    adaptive:
+        Optional ``repro.telemetry.AdaptiveFormatSelector`` (duck-typed);
+        ``serve_optimize`` consults it and ``observe`` updates it, including
+        drift-triggered cache invalidation.
     """
 
     def __init__(
@@ -107,6 +151,9 @@ class AutoSpmvSession:
         tuner: AutoSpMV,
         cache: TuningCache | None = None,
         cache_path: str | Path | None = None,
+        *,
+        telemetry=None,
+        adaptive=None,
     ):
         if cache is None:
             if cache_path is not None and Path(cache_path).exists():
@@ -124,6 +171,8 @@ class AutoSpmvSession:
         self.tuner = tuner
         self.cache = cache
         self.cache_path = Path(cache_path) if cache_path is not None else None
+        self.telemetry = telemetry
+        self.adaptive = adaptive
         self.stats = SessionStats()
         # fingerprint -> (features, bucket): dedups the f term. LRU-bounded
         # like the kernel memo — a server streaming distinct matrices must
@@ -131,6 +180,9 @@ class AutoSpmvSession:
         # bound is generous).
         self._feat_memo: OrderedDict[str, tuple[SparsityFeatures, str]] = OrderedDict()
         self._feat_memo_limit = 8192
+        # (bucket, objective, fmt) -> regressor latency estimate: one cheap
+        # inference per arm per fleet, dropped with the bucket on invalidate
+        self._pred_memo: dict[tuple[str, str, str], float] = {}
 
     # ------------------------------------------------------------- internals
     def _analyze(
@@ -329,6 +381,185 @@ class AutoSpmvSession:
         )
         return [unique[fp] for fp in fps]
 
+    # ----------------------------------------------------- telemetry serving
+    def _incumbent_format(
+        self, feats: SparsityFeatures, bucket: str, objective: str
+    ) -> str:
+        """The cached run-time plan's format — the bandit's incumbent arm.
+
+        Computed (and cached) via ``plan_run_time`` on first sight, so the
+        classifier's opinion is the arm the bandit starts from."""
+        mode = _run_mode_key("csr", DEFAULT_SCHEDULE)
+        entry = self.cache.peek(bucket, objective, mode)
+        if entry is None:
+            plan = self.tuner.plan_run_time(feats, objective)
+            self.stats.plans_computed += 1
+            entry = self.cache.put(
+                CacheEntry(
+                    bucket=bucket,
+                    objective=objective,
+                    mode=mode,
+                    fmt=plan.best_format,
+                    schedule=DEFAULT_SCHEDULE.as_dict(),
+                    gain_per_iter=plan.gain_per_iter,
+                    latency_gain_per_iter=plan.latency_gain_per_iter,
+                    overhead_s=plan.overhead_s,
+                    convert_overhead_s=plan.convert_overhead_s,
+                )
+            )
+        return entry.fmt
+
+    def _predicted_latency(
+        self,
+        feats: SparsityFeatures,
+        bucket: str,
+        objective: str,
+        fmt: str,
+        schedule: KernelSchedule,
+    ) -> float | None:
+        """Regressor latency estimate for (features, fmt, schedule), memoized
+        per (bucket, objective, fmt) so serving pays one inference per arm."""
+        key = (bucket, objective, fmt)
+        cached = self._pred_memo.get(key)
+        if cached is not None:
+            return cached
+        try:
+            from repro.core.tuning_space import TuningConfig
+
+            est = float(
+                self.tuner.predictor.estimate_objective(
+                    feats, TuningConfig(fmt, schedule), "latency"
+                )
+            )
+        except Exception:  # predictor without regressors: prior-less bandit
+            return None
+        self._pred_memo[key] = est
+        return est
+
+    def serve_optimize(
+        self,
+        dense: np.ndarray,
+        objective: str = "latency",
+        *,
+        fingerprint: str | None = None,
+    ) -> ServedPlan:
+        """The telemetry-aware serving path: cached schedule + bandit format.
+
+        The compile-time plan supplies the kernel schedule and objective
+        estimates exactly as before; with an ``adaptive`` selector attached
+        the *format* is the bandit's pick — the cached run-time plan as
+        incumbent, alternates within the exploration budget. Without one
+        this degrades to ``compile_time_optimize`` plus plan identity, so
+        telemetry-only deployments record without changing any decision.
+        """
+        fp, feats, bucket = self._analyze(dense, fingerprint)
+        key = self.plan_key(feats, objective)
+        pre_existing = self.cache.peek(*key) is not None
+        base = self.compile_time_optimize(dense, objective, fingerprint=fp)
+        fmt, exploratory = "csr", False
+        if self.adaptive is not None:
+            incumbent = self._incumbent_format(feats, bucket, objective)
+            fmt, exploratory = self.adaptive.choose(
+                bucket,
+                objective,
+                incumbent,
+                FORMAT_NAMES,
+                prior_value=self._predicted_latency(
+                    feats, bucket, objective, incumbent, base.schedule
+                ),
+            )
+            if exploratory:
+                self.stats.explorations += 1
+        if fmt == "csr":
+            kernel = base.kernel
+        else:
+            try:
+                kernel = self._compile(dense, fp, fmt, base.schedule)
+            except Exception as exc:
+                # an exploratory format can be infeasible for this matrix
+                # (storage blow-up, tile mismatch): serving must not fail on
+                # a bandit probe — fall back to the compile-time CSR kernel
+                # and retire the arm so the failure is paid once, not per
+                # request
+                log.warning(
+                    "serve: %s infeasible for bucket %s (%s); serving csr",
+                    fmt,
+                    bucket,
+                    exc,
+                )
+                if self.adaptive is not None:
+                    self.adaptive.disable(bucket, objective, fmt)
+                fmt, exploratory, kernel = "csr", False, base.kernel
+        return ServedPlan(
+            fingerprint=fp,
+            features=feats,
+            bucket=bucket,
+            objective=objective,
+            fmt=fmt,
+            schedule=base.schedule,
+            kernel=kernel,
+            predicted=dict(base.predicted),
+            plan_id="/".join(key),
+            exploratory=exploratory,
+            cache_hit=pre_existing,
+            predicted_s=self._predicted_latency(
+                feats, bucket, objective, fmt, base.schedule
+            ),
+        )
+
+    def observe(self, plan: ServedPlan, measured_s: float) -> None:
+        """Feed one measured execution back: record, update the bandit, and
+        evict the cached plan when drift is sustained (measure → relearn)."""
+        self.stats.observations += 1
+        predicted_s = plan.predicted_s
+        if self.telemetry is not None:
+            self.telemetry.observe(
+                bucket=plan.bucket,
+                objective=plan.objective,
+                fmt=plan.fmt,
+                measured_s=measured_s,
+                predicted_s=predicted_s,
+                plan_id=plan.plan_id,
+                exploratory=plan.exploratory,
+                schedule=plan.schedule.as_dict(),
+                features=plan.features.dict(),
+            )
+        if self.adaptive is None:
+            return
+        self.adaptive.update(
+            plan.bucket, plan.objective, plan.fmt, measured_s, predicted_s=predicted_s
+        )
+        challenger = self.adaptive.review(plan.bucket, plan.objective)
+        if challenger is not None:
+            dropped = self.invalidate(plan.bucket, plan.objective)
+            self.adaptive.promote(plan.bucket, plan.objective, challenger)
+            log.info(
+                "drift: bucket=%s obj=%s %s -> %s (%d stale plans dropped)",
+                plan.bucket,
+                plan.objective,
+                plan.fmt,
+                challenger,
+                dropped,
+            )
+
+    def invalidate(
+        self, bucket: str, objective: str | None = None, mode: str | None = None
+    ) -> int:
+        """Evict cached plans for a bucket; the next request re-plans against
+        the current predictors (which feedback may have refit meanwhile)."""
+        dropped = self.cache.invalidate(bucket, objective, mode)
+        if dropped:
+            self.stats.invalidations += 1
+        # the memoized regressor estimates belong to the evicted plans: a
+        # refit predictor must be re-consulted for this bucket
+        for key in [
+            k
+            for k in self._pred_memo
+            if k[0] == bucket and (objective is None or k[1] == objective)
+        ]:
+            del self._pred_memo[key]
+        return dropped
+
     # ----------------------------------------------------------- persistence
     def save(self, path: str | Path | None = None) -> Path:
         """Persist the plan cache (kernels stay process-local)."""
@@ -365,4 +596,4 @@ def build_tuner(
         overhead = OverheadPredictor().fit(
             [measure_overheads(generate_by_name(n, scale=scale), n) for n in names]
         )
-    return AutoSpMV(pred, overhead, interpret=interpret)
+    return AutoSpMV(pred, overhead, interpret=interpret, dataset=ds)

@@ -11,6 +11,12 @@ from the paper's matrix suite (with repeats, as real solver fleets resubmit
 the same systems) flows through an ``AutoSpmvSession``-backed ``SpmvServer``.
 With ``--spmv-cache`` the tuning decisions persist to JSON, so a relaunched
 server starts warm and skips the predictor inferences.
+
+Telemetry flags (SpMV mode): ``--telemetry`` times every served kernel and
+aggregates per-(bucket, format) measurement arms; ``--telemetry-log`` makes
+the records a restart-surviving JSONL append-log; ``--adaptive`` layers the
+UCB bandit + drift detector on top (implies ``--telemetry``) so mispredicted
+cached plans are explored, detected, evicted, and relearned while serving.
 """
 
 from __future__ import annotations
@@ -70,10 +76,44 @@ def serve_spmv(args) -> list[SpmvRequest]:
         scale=args.spmv_scale, names=MATRIX_NAMES[: args.spmv_train_matrices]
     )
     log.info("tuner ready in %.1fs", time.time() - t0)
-    session = AutoSpmvSession(tuner, cache_path=args.spmv_cache)
+
+    telemetry = adaptive = feedback = None
+    if args.telemetry or args.adaptive or args.telemetry_log or args.refit_every > 0:
+        from repro.telemetry import (
+            AdaptiveFormatSelector,
+            FeedbackConfig,
+            FeedbackLoop,
+            TelemetryRecorder,
+        )
+
+        telemetry = TelemetryRecorder(log_path=args.telemetry_log)
+        if telemetry.total_observations():
+            log.info(
+                "telemetry warm start: %s from %s",
+                telemetry.summary(),
+                args.telemetry_log,
+            )
+        if args.adaptive:
+            adaptive = AdaptiveFormatSelector()
+            seeded = adaptive.warm_start(telemetry)
+            if seeded:
+                log.info("bandit warm start: %d arms seeded from the log", seeded)
+        if args.refit_every > 0:
+            # base_dataset keeps the offline labels in every refit: a few
+            # fleet measurements sharpen the classifier, never replace its
+            # coverage of unmeasured feature regions
+            feedback = FeedbackLoop(
+                telemetry,
+                base_dataset=tuner.dataset,
+                config=FeedbackConfig(refit_every=args.refit_every),
+            )
+
+    session = AutoSpmvSession(
+        tuner, cache_path=args.spmv_cache, telemetry=telemetry, adaptive=adaptive
+    )
     if len(session.cache):
         log.info("warm start: %d cached plans from %s", len(session.cache), args.spmv_cache)
-    server = SpmvServer(session)
+    server = SpmvServer(session, feedback=feedback)
 
     # synthetic traffic: suite matrices with repeats (fleet-like resubmission)
     rng = np.random.default_rng(args.seed)
@@ -88,7 +128,15 @@ def serve_spmv(args) -> list[SpmvRequest]:
     for r in done:
         ref = r.dense @ r.x
         err = np.abs(r.y - ref).max() / (np.abs(ref).max() + 1e-9)
-        log.info("req %d: hit=%s rel.err=%.2e %s", r.rid, r.cache_hit, err, r.schedule)
+        log.info(
+            "req %d: hit=%s fmt=%s%s rel.err=%.2e %s",
+            r.rid,
+            r.cache_hit,
+            r.fmt or "csr",
+            " (explore)" if r.exploratory else "",
+            err,
+            r.schedule,
+        )
     stats = session.stats
     log.info(
         "served %d requests with %d feature passes, %d plans, %d kernel compiles; cache %s",
@@ -98,6 +146,11 @@ def serve_spmv(args) -> list[SpmvRequest]:
         stats.kernel_compiles,
         session.cache.stats(),
     )
+    log.info("server summary: %s", server.summary())
+    if telemetry is not None:
+        telemetry.flush()
+        if args.telemetry_log:
+            log.info("telemetry log flushed to %s", args.telemetry_log)
     if args.spmv_cache:
         session.save()
         log.info("tuning cache saved to %s", args.spmv_cache)
@@ -119,6 +172,17 @@ def main(argv=None):
                     help="JSON path for the persistent tuning cache")
     ap.add_argument("--spmv-scale", type=float, default=0.0015)
     ap.add_argument("--spmv-train-matrices", type=int, default=8)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="measure every served kernel and aggregate per-arm stats")
+    ap.add_argument("--telemetry-log", default=None,
+                    help="JSONL append-log path; replayed on restart "
+                         "(implies --telemetry)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="UCB format bandit + drift-triggered cache invalidation "
+                         "(implies --telemetry)")
+    ap.add_argument("--refit-every", type=int, default=0,
+                    help="refit the format classifier every N observations "
+                         "(0=off; implies --telemetry)")
     ap.add_argument("--objective", default="latency",
                     choices=["latency", "energy", "power", "efficiency"])
     args = ap.parse_args(argv)

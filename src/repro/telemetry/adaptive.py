@@ -1,0 +1,323 @@
+"""UCB bandit over the classifier's prior + model-drift cache invalidation.
+
+The serving path (PR 1) trusts the format classifier forever: a mispredicted
+plan is cached and served until the process dies. This module closes the
+loop the way adaptive SpMV selection does online (Li et al.,
+arXiv:2006.16767): the *cached plan is the incumbent arm*, alternate formats
+receive a bounded exploration budget, and measured wall times decide.
+
+Two signals can evict a stale plan:
+
+* **arm regret** — a challenger format's measured mean beats the incumbent's
+  EWMA by more than ``drift_threshold`` (relative), sustained for
+  ``drift_window`` consecutive incumbent observations;
+* **model drift** — the incumbent's measured wall time exceeds the model's
+  own latency estimate by more than ``drift_threshold``, sustained the same
+  way (the §5.3 overhead/gain arithmetic is wrong for this bucket).
+
+On invalidation the selector *promotes* the measured-best format to
+incumbent (measurements outrank the model) and the caller drops the
+``TuningCache`` entries so the next request re-plans — against predictors
+the feedback loop may meanwhile have refit.
+
+All rewards are measured wall times, minimized regardless of the tuning
+objective: energy/power are not observable host-side, but every objective's
+plan still has to be *executed*, so latency is the one universally measured
+signal (the recorder keeps the per-objective aggregation for the dataset
+export).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.utils.logging import get_logger
+from repro.utils.timing import RollingStats
+
+log = get_logger("telemetry.adaptive")
+
+CellKey = tuple[str, str]  # (bucket, objective)
+
+
+@dataclass
+class AdaptiveConfig:
+    exploration_bonus: float = 0.5  # UCB width, in units of the best arm's mean
+    exploration_fraction: float = 0.25  # max fraction of pulls spent off-incumbent
+    prior_weight: int = 2  # pseudo-pulls crediting the model's estimate to the incumbent
+    min_challenger_pulls: int = 2  # observations before a challenger can evict
+    drift_window: int = 4  # consecutive drifted incumbent observations to invalidate
+    drift_threshold: float = 0.25  # relative margin for both drift signals
+    window: int = 64  # RollingStats window per arm
+    ewma_alpha: float = 0.3
+
+
+@dataclass
+class ArmState:
+    stats: RollingStats  # MEASURED samples only — priors never contaminate it
+    pulls: int = 0  # real observations
+    prior_pulls: int = 0  # pseudo-pull credit from the model's estimate
+    prior_value: float | None = None  # the estimate itself (UCB value until
+    # the first real pull; model scale may differ from measured scale, so it
+    # must never be averaged into the measured mean)
+    disabled: bool = False  # conversion infeasible for this cell: never pick
+
+    @property
+    def n_eff(self) -> int:
+        return self.pulls + self.prior_pulls
+
+    def value(self) -> float | None:
+        """Mean for UCB scoring: measured when available, else the prior."""
+        if self.pulls:
+            return self.stats.mean
+        return self.prior_value
+
+
+@dataclass
+class CellState:
+    """Bandit state for one (bucket, objective) plan-cache cell."""
+
+    incumbent: str
+    arms: dict[str, ArmState] = field(default_factory=dict)
+    total_pulls: int = 0
+    exploration_pulls: int = 0
+    drift_strikes: int = 0
+    promoted: bool = False  # incumbent came from measurement, not the model
+    invalidations: int = 0
+
+
+class AdaptiveFormatSelector:
+    """Per-cell UCB1 with an incumbent prior and a sustained-drift evictor."""
+
+    def __init__(self, config: AdaptiveConfig | None = None):
+        self.config = config or AdaptiveConfig()
+        self._cells: dict[CellKey, CellState] = {}
+
+    # ------------------------------------------------------------- internals
+    def _cell(
+        self, bucket: str, objective: str, incumbent: str, prior_value: float | None
+    ) -> CellState:
+        key = (bucket, objective)
+        cell = self._cells.get(key)
+        if cell is None:
+            cell = CellState(incumbent=incumbent)
+            self._cells[key] = cell
+            self._seed_prior(cell, incumbent, prior_value)
+        elif not cell.promoted and incumbent != cell.incumbent:
+            # the plan changed under us (cache invalidation + re-plan, or a
+            # refit predictor): adopt it and credit its estimate
+            cell.incumbent = incumbent
+            cell.drift_strikes = 0
+            self._seed_prior(cell, incumbent, prior_value)
+        elif cell.promoted and incumbent == cell.incumbent:
+            cell.promoted = False  # the model caught up with the measurements
+        return cell
+
+    def _seed_prior(self, cell: CellState, fmt: str, prior_value: float | None) -> None:
+        arm = self._arm(cell, fmt)
+        if prior_value is None or prior_value <= 0 or arm.prior_pulls:
+            return
+        arm.prior_value = float(prior_value)
+        arm.prior_pulls = self.config.prior_weight
+
+    def _arm(self, cell: CellState, fmt: str) -> ArmState:
+        arm = cell.arms.get(fmt)
+        if arm is None:
+            arm = ArmState(RollingStats(self.config.window, self.config.ewma_alpha))
+            cell.arms[fmt] = arm
+        return arm
+
+    @staticmethod
+    def _best_measured(cell: CellState, min_pulls: int = 1) -> str | None:
+        cands = [
+            (arm.stats.mean, fmt)
+            for fmt, arm in cell.arms.items()
+            if arm.pulls >= min_pulls and not arm.disabled
+        ]
+        return min(cands)[1] if cands else None
+
+    def disable(
+        self, bucket: str, objective: str, fmt: str, *, fallback: str = "csr"
+    ) -> None:
+        """Mark a format unservable for this cell (conversion infeasible):
+        ``choose`` will never pick it again, so a failed exploration is paid
+        once per cell, not once per request. If the *incumbent* itself is
+        disabled (the cached plan was infeasible), the measured-best arm —
+        or ``fallback``, the format the caller actually served — takes over,
+        so a budget-closed ``choose`` never returns an unservable arm."""
+        cell = self._cells.get((bucket, objective))
+        if cell is None:
+            return
+        self._arm(cell, fmt).disabled = True
+        if fmt == cell.incumbent:
+            cell.incumbent = self._best_measured(cell) or fallback
+            cell.promoted = True
+            cell.drift_strikes = 0
+
+    # ----------------------------------------------------------------- choose
+    def choose(
+        self,
+        bucket: str,
+        objective: str,
+        incumbent: str,
+        candidates: tuple[str, ...],
+        *,
+        prior_value: float | None = None,
+    ) -> tuple[str, bool]:
+        """Pick the format to serve this request; returns (fmt, exploratory).
+
+        ``incumbent`` is the cached plan's format, ``prior_value`` the
+        model's latency estimate for it (seeds the incumbent arm so the
+        classifier's opinion is the starting point, not ignored).
+        """
+        cfg = self.config
+        cell = self._cell(bucket, objective, incumbent, prior_value)
+        # bounded exploration: off-incumbent pulls may not exceed the budget
+        budget_open = cell.exploration_pulls < max(
+            cfg.exploration_fraction * (cell.total_pulls + 1), 1.0
+        )
+        if not budget_open and not self._arm(cell, cell.incumbent).disabled:
+            return cell.incumbent, False
+        best_ref = None
+        for fmt in candidates:
+            v = self._arm(cell, fmt).value()
+            if v is not None and (best_ref is None or v < best_ref):
+                best_ref = v
+        ref = best_ref if best_ref and best_ref > 0 else 1.0
+        ln_n = math.log(cell.total_pulls + 1.0 + len(candidates))
+        best_fmt, best_score = None, -math.inf
+        for fmt in candidates:
+            arm = self._arm(cell, fmt)
+            if arm.disabled:
+                continue
+            v = arm.value()
+            if v is None:
+                # untried, prior-less arm: forced (budget-gated) pull —
+                # unless the budget is closed and we are only here because
+                # the incumbent is unservable
+                score = math.inf if budget_open else -math.inf
+            else:
+                width = cfg.exploration_bonus * ref * math.sqrt(ln_n / arm.n_eff)
+                score = -v + width
+            if score > best_score:
+                best_fmt, best_score = fmt, score
+        if best_fmt is None:  # everything disabled: serve the incumbent as-is
+            best_fmt = cell.incumbent
+        return best_fmt, best_fmt != cell.incumbent
+
+    # ----------------------------------------------------------------- update
+    def update(
+        self,
+        bucket: str,
+        objective: str,
+        fmt: str,
+        measured_s: float,
+        *,
+        predicted_s: float | None = None,
+    ) -> None:
+        """Fold one measured outcome into the bandit state."""
+        cell = self._cells.get((bucket, objective))
+        if cell is None:  # observation without a prior choose() — adopt it
+            cell = self._cell(bucket, objective, fmt, predicted_s)
+        arm = self._arm(cell, fmt)
+        arm.stats.add(float(measured_s))
+        arm.pulls += 1
+        cell.total_pulls += 1
+        if fmt != cell.incumbent:
+            cell.exploration_pulls += 1
+            return
+        # drift detection runs on incumbent observations only
+        cfg = self.config
+        drifted = False
+        if predicted_s is not None and predicted_s > 0:
+            drifted |= measured_s > predicted_s * (1.0 + cfg.drift_threshold)
+        inc_ewma = arm.stats.ewma if arm.stats.ewma is not None else arm.stats.mean
+        for other_fmt, other in cell.arms.items():
+            if other_fmt == fmt or other.pulls < cfg.min_challenger_pulls:
+                continue
+            drifted |= other.stats.mean * (1.0 + cfg.drift_threshold) < inc_ewma
+        cell.drift_strikes = cell.drift_strikes + 1 if drifted else 0
+
+    # ----------------------------------------------------------------- review
+    def review(self, bucket: str, objective: str) -> str | None:
+        """Return the measured-best challenger if the incumbent should be
+        evicted (sustained drift), else None. Idempotent until ``promote``.
+
+        Eviction requires the challenger to beat the incumbent's measured
+        EWMA by the full ``drift_threshold`` margin: model-drift strikes
+        alone (e.g. a wrong cost-model scale, which makes every measurement
+        exceed its estimate) or a noise-level difference between near-equal
+        formats must never thrash the cache."""
+        cell = self._cells.get((bucket, objective))
+        if cell is None or cell.drift_strikes < self.config.drift_window:
+            return None
+        challenger = self._best_measured(cell, self.config.min_challenger_pulls)
+        inc = cell.arms.get(cell.incumbent)
+        inc_val = None
+        if inc is not None and inc.pulls:
+            inc_val = inc.stats.ewma if inc.stats.ewma is not None else inc.stats.mean
+        margin_beaten = (
+            challenger is not None
+            and challenger != cell.incumbent
+            and inc_val is not None
+            and cell.arms[challenger].stats.mean
+            * (1.0 + self.config.drift_threshold)
+            < inc_val
+        )
+        if not margin_beaten:
+            cell.drift_strikes = 0
+            return None
+        return challenger
+
+    def promote(self, bucket: str, objective: str, fmt: str) -> None:
+        """Install the measured-best format as incumbent after an eviction."""
+        cell = self._cells.get((bucket, objective))
+        if cell is None:
+            return
+        log.info(
+            "promoting %s over %s for bucket=%s objective=%s after %d strikes",
+            fmt,
+            cell.incumbent,
+            bucket,
+            objective,
+            cell.drift_strikes,
+        )
+        cell.incumbent = fmt
+        cell.promoted = True
+        cell.drift_strikes = 0
+        cell.exploration_pulls = 0
+        cell.invalidations += 1
+
+    # ---------------------------------------------------------------- queries
+    def incumbent(self, bucket: str, objective: str) -> str | None:
+        cell = self._cells.get((bucket, objective))
+        return cell.incumbent if cell is not None else None
+
+    def warm_start(self, recorder) -> int:
+        """Seed arm statistics from a replayed ``TelemetryRecorder`` so a
+        restarted server does not re-pay exploration it already logged."""
+        seeded = 0
+        for (bucket, objective, fmt), agg in recorder.arms().items():
+            cell = self._cells.get((bucket, objective))
+            if cell is None:
+                cell = CellState(incumbent=fmt)
+                self._cells[(bucket, objective)] = cell
+            arm = self._arm(cell, fmt)
+            if arm.pulls:
+                continue
+            arm.stats.add(agg.stats.mean)
+            arm.pulls += 1
+            cell.total_pulls += 1
+            seeded += 1
+        return seeded
+
+    def summary(self) -> dict:
+        return {
+            "cells": len(self._cells),
+            "pulls": sum(c.total_pulls for c in self._cells.values()),
+            "exploration_pulls": sum(
+                c.exploration_pulls for c in self._cells.values()
+            ),
+            "promotions": sum(c.invalidations for c in self._cells.values()),
+            "promoted_cells": sum(1 for c in self._cells.values() if c.promoted),
+        }

@@ -14,6 +14,13 @@ matrix fingerprint, plans come from the feature-bucketed cache (persisted
 across restarts), and prepared kernels are reused from the process memo. The
 tuning cost is thereby paid once per unique matrix per fleet, which is the
 paper's §5.3 amortization argument turned into a serving layer.
+
+With telemetry attached to the session (repro/telemetry) the server times
+every kernel execution and feeds it back via ``session.observe``: requests
+become labelled measurements, the bandit explores alternate formats within
+budget, drifted plans are evicted, and an optional ``FeedbackLoop``
+incrementally refits the format classifier from the accumulated records —
+the predict→measure→relearn loop closed inside the serving path.
 """
 
 from __future__ import annotations
@@ -137,7 +144,9 @@ class SpmvRequest:
     # outputs
     y: np.ndarray | None = None
     schedule: Any = None  # KernelSchedule the session picked
+    fmt: str | None = None  # format served (telemetry/adaptive path)
     cache_hit: bool = False  # plan came from the session cache
+    exploratory: bool = False  # served off-incumbent by the bandit
     latency_s: float = 0.0
 
 
@@ -152,16 +161,56 @@ class SpmvServer:
     predictor inferences entirely.
     """
 
-    def __init__(self, session: AutoSpmvSession):
+    def __init__(
+        self,
+        session: AutoSpmvSession,
+        *,
+        adaptive: bool | None = None,
+        feedback=None,  # optional repro.telemetry.FeedbackLoop
+    ):
         self.session = session
+        # default: take the observed path whenever the session can consume
+        # measurements (telemetry recorder and/or bandit attached)
+        self.adaptive = (
+            adaptive
+            if adaptive is not None
+            else (session.telemetry is not None or session.adaptive is not None)
+        )
+        self.feedback = feedback
         self.batches_served = 0
         self.requests_served = 0
+
+    def _run_observed(self, objective: str, group: list[SpmvRequest]) -> None:
+        """Per-request serve + measure + observe (telemetry/adaptive mode).
+
+        Requests are timed individually — the measurement *is* the product
+        here, so the batch dedup of ``optimize_many`` gives way to per-call
+        timing; plan/kernel reuse still comes from the session caches."""
+        for req in group:
+            plan = self.session.serve_optimize(req.dense, objective)
+            t0 = time.perf_counter()
+            y = np.asarray(plan.kernel(jnp.asarray(req.x)))
+            dt = time.perf_counter() - t0
+            req.y = y
+            req.schedule = plan.schedule
+            req.fmt = plan.fmt
+            req.cache_hit = plan.cache_hit
+            req.exploratory = plan.exploratory
+            req.latency_s = dt
+            self.session.observe(plan, dt)
+        if self.feedback is not None:
+            refit = self.feedback.maybe_refit(self.session.tuner.predictor)
+            if refit:
+                log.info("telemetry refit after batch: %s", refit)
 
     def run(self, requests: list[SpmvRequest]) -> list[SpmvRequest]:
         by_objective: dict[str, list[SpmvRequest]] = {}
         for r in requests:
             by_objective.setdefault(r.objective, []).append(r)
         for objective, group in by_objective.items():
+            if self.adaptive:
+                self._run_observed(objective, group)
+                continue
             t_group = time.perf_counter()
             seen_keys = {
                 (e.bucket, e.objective, e.mode) for e in self.session.cache.entries()
@@ -191,3 +240,19 @@ class SpmvServer:
             self.session.cache.stats(),
         )
         return requests
+
+    def summary(self) -> dict:
+        """Server-level stats incl. telemetry/bandit state (serve CLI dump)."""
+        out = {
+            "batches": self.batches_served,
+            "requests": self.requests_served,
+            "session": self.session.stats.as_dict(),
+            "cache": self.session.cache.stats(),
+        }
+        if self.session.telemetry is not None:
+            out["telemetry"] = self.session.telemetry.summary()
+        if self.session.adaptive is not None:
+            out["adaptive"] = self.session.adaptive.summary()
+        if self.feedback is not None:
+            out["refits"] = self.feedback.refits
+        return out

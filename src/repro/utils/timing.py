@@ -1,18 +1,115 @@
-"""Wall-time measurement helpers.
+"""Wall-time measurement helpers + streaming sample statistics.
 
 The paper measures kernel latency by repeated runs and averaging (Section
 6.3, 500-200000 reps per kernel). ``measure_wall_time`` reproduces that
 protocol for host-side (CPU) measurement: warmup, then ``reps`` timed calls
 with ``block_until_ready`` so async dispatch does not hide work.
+
+``ewma`` / ``percentile`` / ``RollingStats`` are the aggregation primitives
+the telemetry recorder builds per-arm latency estimates from: all-time
+count/mean (Welford), an exponentially-weighted moving average that tracks
+drift, and percentiles over a bounded recent window.
 """
 
 from __future__ import annotations
 
+import math
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
+
+
+def ewma(prev: float | None, sample: float, alpha: float = 0.2) -> float:
+    """One EWMA step; the first sample initializes the average.
+
+    ``alpha`` is the weight of the new sample (0 < alpha <= 1): higher
+    tracks drift faster, lower smooths measurement noise harder.
+    """
+    if not 0.0 < alpha <= 1.0:
+        raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+    if prev is None:
+        return float(sample)
+    return alpha * float(sample) + (1.0 - alpha) * prev
+
+
+def percentile(samples: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile of ``samples`` (q in [0, 100]).
+
+    Returns NaN for an empty window and the sample itself for a single
+    observation — callers treat NaN as "no signal yet", not as zero.
+    """
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"q must be in [0, 100], got {q}")
+    xs = sorted(float(s) for s in samples)
+    if not xs:
+        return math.nan
+    if len(xs) == 1:
+        return xs[0]
+    pos = (q / 100.0) * (len(xs) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+class RollingStats:
+    """Streaming sample aggregator: all-time mean + EWMA + windowed percentiles.
+
+    ``count``/``mean`` cover every sample ever added (Welford update, no
+    storage); ``ewma`` weights recent samples; ``percentile(q)`` and ``min``/
+    ``max`` are computed over the last ``window`` samples only, bounding
+    memory per telemetry arm.
+    """
+
+    def __init__(self, window: int = 128, ewma_alpha: float = 0.2):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = int(window)
+        self.ewma_alpha = float(ewma_alpha)
+        self.count = 0
+        self.mean = 0.0
+        self._m2 = 0.0  # Welford sum of squared deviations
+        self.ewma: float | None = None
+        self.last: float | None = None
+        self._recent: deque[float] = deque(maxlen=self.window)
+
+    def add(self, sample: float) -> None:
+        x = float(sample)
+        self.count += 1
+        delta = x - self.mean
+        self.mean += delta / self.count
+        self._m2 += delta * (x - self.mean)
+        self.ewma = ewma(self.ewma, x, self.ewma_alpha)
+        self.last = x
+        self._recent.append(x)
+
+    @property
+    def std(self) -> float:
+        if self.count < 2:
+            return 0.0
+        return math.sqrt(self._m2 / (self.count - 1))
+
+    def percentile(self, q: float) -> float:
+        return percentile(self._recent, q)
+
+    def window_min(self) -> float:
+        return min(self._recent) if self._recent else math.nan
+
+    def window_max(self) -> float:
+        return max(self._recent) if self._recent else math.nan
+
+    def as_dict(self) -> dict[str, float]:
+        return {
+            "count": self.count,
+            "mean": self.mean,
+            "std": self.std,
+            "ewma": math.nan if self.ewma is None else self.ewma,
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+        }
 
 
 @dataclass

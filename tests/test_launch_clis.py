@@ -43,3 +43,27 @@ def test_serve_cli_generates():
         "--max-len", "64",
     ])
     assert all(r.done and len(r.generated) == 3 for r in done)
+
+
+def test_serve_cli_spmv_adaptive_telemetry(tmp_path):
+    """SpMV serving with the full telemetry loop switched on: requests are
+    answered correctly, the tuning cache and telemetry log are persisted."""
+    done = serve_main([
+        "--spmv",
+        "--requests", "6",
+        "--spmv-train-matrices", "2",
+        "--spmv-scale", "0.001",
+        "--spmv-cache", str(tmp_path / "tuning.json"),
+        "--adaptive",
+        "--telemetry-log", str(tmp_path / "telemetry.jsonl"),
+        "--refit-every", "4",
+    ])
+    assert len(done) == 6
+    for r in done:
+        ref = r.dense @ r.x
+        err = np.abs(r.y - ref).max() / (np.abs(ref).max() + 1e-9)
+        assert err < 0.05  # bfloat16 schedules allowed; must still be SpMV
+        assert r.fmt is not None and r.latency_s > 0
+    assert (tmp_path / "tuning.json").exists()
+    log_lines = (tmp_path / "telemetry.jsonl").read_text().splitlines()
+    assert len(log_lines) == 6

@@ -1,0 +1,130 @@
+"""Tests for the timing/statistics helpers the telemetry recorder builds on:
+EWMA updates, interpolated percentiles, and RollingStats — with the
+empty-window and single-sample edge cases spelled out."""
+
+import math
+
+import pytest
+
+from repro.utils.timing import RollingStats, ewma, measure_wall_time, percentile
+
+
+# ---------------------------------------------------------------------- ewma
+def test_ewma_first_sample_initializes():
+    assert ewma(None, 3.5, alpha=0.2) == 3.5
+
+
+def test_ewma_weights_new_sample():
+    assert ewma(1.0, 2.0, alpha=0.25) == pytest.approx(0.25 * 2.0 + 0.75 * 1.0)
+
+
+def test_ewma_alpha_one_tracks_last():
+    assert ewma(10.0, 2.0, alpha=1.0) == 2.0
+
+
+def test_ewma_rejects_bad_alpha():
+    with pytest.raises(ValueError):
+        ewma(1.0, 2.0, alpha=0.0)
+    with pytest.raises(ValueError):
+        ewma(1.0, 2.0, alpha=1.5)
+
+
+def test_ewma_converges_toward_constant_stream():
+    v = None
+    for _ in range(200):
+        v = ewma(v, 7.0, alpha=0.3)
+    assert v == pytest.approx(7.0)
+
+
+# ---------------------------------------------------------------- percentile
+def test_percentile_empty_window_is_nan():
+    assert math.isnan(percentile([], 50))
+    assert math.isnan(percentile([], 0))
+    assert math.isnan(percentile([], 100))
+
+
+def test_percentile_single_sample_is_that_sample():
+    for q in (0, 50, 95, 100):
+        assert percentile([4.2], q) == 4.2
+
+
+def test_percentile_interpolates():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert percentile(xs, 25) == pytest.approx(1.75)
+
+
+def test_percentile_order_independent():
+    assert percentile([3.0, 1.0, 2.0], 50) == 2.0
+
+
+def test_percentile_rejects_bad_q():
+    with pytest.raises(ValueError):
+        percentile([1.0], -1)
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+
+
+# -------------------------------------------------------------- RollingStats
+def test_rolling_stats_empty():
+    rs = RollingStats()
+    assert rs.count == 0
+    assert rs.ewma is None and rs.last is None
+    assert math.isnan(rs.percentile(50))
+    assert math.isnan(rs.window_min()) and math.isnan(rs.window_max())
+    assert rs.std == 0.0
+    assert math.isnan(rs.as_dict()["ewma"])
+
+
+def test_rolling_stats_single_sample():
+    rs = RollingStats()
+    rs.add(2.5)
+    assert rs.count == 1
+    assert rs.mean == 2.5 and rs.ewma == 2.5 and rs.last == 2.5
+    assert rs.percentile(50) == 2.5 and rs.percentile(95) == 2.5
+    assert rs.std == 0.0
+
+
+def test_rolling_stats_mean_and_std_match_numpy():
+    import numpy as np
+
+    xs = [0.5, 1.5, 2.0, 8.0, 3.25]
+    rs = RollingStats()
+    for x in xs:
+        rs.add(x)
+    assert rs.mean == pytest.approx(np.mean(xs))
+    assert rs.std == pytest.approx(np.std(xs, ddof=1))
+
+
+def test_rolling_stats_window_bounds_percentiles():
+    rs = RollingStats(window=3)
+    for x in [100.0, 1.0, 2.0, 3.0]:
+        rs.add(x)
+    # the 100.0 fell out of the window: percentiles see [1, 2, 3] only
+    assert rs.percentile(100) == 3.0
+    assert rs.window_max() == 3.0
+    # but the all-time mean still includes it
+    assert rs.mean == pytest.approx((100.0 + 1.0 + 2.0 + 3.0) / 4)
+
+
+def test_rolling_stats_ewma_tracks_shift_faster_than_mean():
+    rs = RollingStats(ewma_alpha=0.5)
+    for _ in range(20):
+        rs.add(1.0)
+    for _ in range(5):
+        rs.add(10.0)
+    assert rs.ewma > rs.mean  # the drift signal reacts before the mean does
+
+
+def test_rolling_stats_rejects_bad_window():
+    with pytest.raises(ValueError):
+        RollingStats(window=0)
+
+
+# ----------------------------------------------------- measure_wall_time (smoke)
+def test_measure_wall_time_counts_reps():
+    out = measure_wall_time(lambda: 1 + 1, warmup=1, reps=3)
+    assert out["reps"] >= 3
+    assert out["min_s"] <= out["mean_s"]
