@@ -41,7 +41,7 @@ from repro.core import (
 from repro.core.predictor import OBJECTIVES
 from repro.kernels.common import DEFAULT_SCHEDULE
 from repro.kernels.ops import clear_kernel_memo
-from repro.sparse.formats import FORMAT_NAMES
+from repro.sparse.registry import format_names
 from repro.sparse.generate import random_matrix
 from repro.telemetry import (
     AdaptiveConfig,
@@ -65,7 +65,7 @@ class _Env:
         for m in mats:
             stats = MatrixStats(m)
             row = {}
-            for fmt in FORMAT_NAMES:
+            for fmt in format_names():
                 vals = model.evaluate(stats, fmt, DEFAULT_SCHEDULE)
                 row[fmt] = vals.latency if vals.feasible else float("inf")
             self.true.append(row)

@@ -11,7 +11,7 @@ from __future__ import annotations
 from benchmarks.common import get_dataset, improvement_pct, print_table, save_result
 from repro.core import KNOBS, MINIMIZE, OBJECTIVES, DEFAULT_CONFIG
 from repro.core.tuning_space import TuningConfig
-from repro.sparse.formats import FORMAT_NAMES
+from repro.sparse.registry import default_format, format_names
 
 
 def run(scale_name: str = "paper") -> dict:
@@ -20,7 +20,7 @@ def run(scale_name: str = "paper") -> dict:
     matrix = "eu-2005" if "eu-2005" in ds.matrices else suite[-1]
     recs = {r.config: r for r in ds.for_matrix(matrix) if r.feasible}
     default = ds.default_record(matrix)
-    knob_axes = {**{k: v for k, v in KNOBS.items()}, "format": ("fmt", FORMAT_NAMES)}
+    knob_axes = {**{k: v for k, v in KNOBS.items()}, "format": ("fmt", format_names())}
     rows, payload = [], {"matrix": matrix}
     for knob, (field, choices) in knob_axes.items():
         payload[knob] = {}
@@ -31,7 +31,9 @@ def run(scale_name: str = "paper") -> dict:
                 if knob == "format":
                     cfg = TuningConfig(c, DEFAULT_CONFIG.schedule)
                 else:
-                    cfg = TuningConfig("csr", DEFAULT_CONFIG.schedule.replace(**{field: c}))
+                    cfg = TuningConfig(
+                        default_format(), DEFAULT_CONFIG.schedule.replace(**{field: c})
+                    )
                 r = recs.get(cfg)
                 if r is None:
                     continue

@@ -25,9 +25,12 @@ BENCHES = [
     ("adaptive", "benchmarks.bench_adaptive", "Telemetry bandit misprediction recovery"),
     ("fig12", "benchmarks.fig12_sensitivity", "Fig.12 hardware sensitivity"),
     ("roofline", "benchmarks.roofline", "Roofline report (dry-run artifacts)"),
+    # keep last: activates the bcsr plugin, which widens the registry for the
+    # rest of the process
+    ("formats", "benchmarks.bench_formats", "Registered-format sweep incl. bcsr plugin"),
 ]
 
-SMOKE_BENCHES = ("session_cache", "adaptive")
+SMOKE_BENCHES = ("session_cache", "adaptive", "formats")
 
 
 def main(argv=None) -> int:

@@ -44,7 +44,6 @@ from repro.core.session import (
 )
 from repro.core.tuning_space import (
     ALL_KNOBS,
-    DEFAULT_CONFIG,
     KNOBS,
     PAPER_KNOBS,
     TuningConfig,
@@ -53,6 +52,15 @@ from repro.core.tuning_space import (
     knob_value,
     schedule_space,
 )
+
+
+def __getattr__(name):
+    if name == "DEFAULT_CONFIG":
+        # forwarded per access — see tuning_space.__getattr__
+        from repro.core import tuning_space
+
+        return tuning_space.DEFAULT_CONFIG
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "AutoSpMV",

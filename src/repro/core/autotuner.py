@@ -27,9 +27,10 @@ import numpy as np
 from repro.core.features import SparsityFeatures, extract_features
 from repro.core.overhead import OverheadPredictor
 from repro.core.predictor import AutoSpmvPredictor
-from repro.core.tuning_space import DEFAULT_CONFIG, TuningConfig
+from repro.core.tuning_space import TuningConfig
 from repro.kernels.common import DEFAULT_SCHEDULE, KernelSchedule
 from repro.kernels.ops import PreparedSpmv, compile_spmv
+from repro.sparse.registry import default_format
 from repro.utils.logging import get_logger
 
 log = get_logger("core.autotuner")
@@ -112,7 +113,7 @@ class AutoSpMV:
         schedule = self.predictor.predict_schedule(feats, objective)
         predicted = {
             obj: self.predictor.estimate_objective(
-                feats, TuningConfig("csr", schedule), obj
+                feats, TuningConfig(default_format(), schedule), obj
             )
             for obj in PREDICTED_OBJECTIVES
         }
@@ -123,9 +124,10 @@ class AutoSpMV:
         feats: SparsityFeatures,
         objective: str = "latency",
         *,
-        current_format: str = "csr",
+        current_format: str | None = None,
         schedule: KernelSchedule = DEFAULT_SCHEDULE,
     ) -> RunTimePlan:
+        current_format = current_format or default_format()
         best_fmt = self.predictor.predict_format(feats, objective)
         cur = self.predictor.estimate_objective(
             feats, TuningConfig(current_format, schedule), objective
@@ -157,7 +159,9 @@ class AutoSpMV:
     ) -> CompileTimeResult:
         feats = extract_features(dense)
         plan = self.plan_compile_time(feats, objective)
-        kernel = compile_spmv(dense, "csr", plan.schedule, interpret=self.interpret)
+        kernel = compile_spmv(
+            dense, default_format(), plan.schedule, interpret=self.interpret
+        )
         log.info("compile-time: %s -> %s", objective, plan.schedule)
         return CompileTimeResult(feats, plan.schedule, kernel, plan.predicted)
 
@@ -168,9 +172,10 @@ class AutoSpMV:
         objective: str = "latency",
         *,
         n_iterations: int = 1000,
-        current_format: str = "csr",
+        current_format: str | None = None,
         schedule: KernelSchedule = DEFAULT_SCHEDULE,
     ) -> RunTimeResult:
+        current_format = current_format or default_format()
         feats = extract_features(dense)
         plan = self.plan_run_time(
             feats, objective, current_format=current_format, schedule=schedule

@@ -28,12 +28,16 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import lru_cache
 
 import numpy as np
 
-from repro.kernels.common import LANE, VMEM_BYTES, KernelSchedule, ceil_to
-from repro.sparse.formats import FORMAT_NAMES
+from repro.kernels.common import VMEM_BYTES, KernelSchedule
+from repro.sparse.registry import (  # noqa: F401  (canonical home moved to the
+    KernelFootprint,  # format registry; re-exported for backward compatibility)
+    MatrixStats,
+    get_format,
+    format_names,
+)
 
 OBJECTIVES = ("latency", "energy", "power", "efficiency")
 # for argmin-style selection: efficiency is maximized, the rest minimized
@@ -109,123 +113,15 @@ TPU_V4 = HardwareProfile(
 HARDWARE = {"tpu_v5e": TPU_V5E, "tpu_v4": TPU_V4}
 
 
-class MatrixStats:
-    """Cached structural statistics of one matrix (host-side numpy)."""
-
-    def __init__(self, dense: np.ndarray):
-        dense = np.asarray(dense)
-        self.n_rows, self.n_cols = dense.shape
-        self.row_counts = (dense != 0).sum(axis=1).astype(np.int64)
-        self.nnz = int(self.row_counts.sum())
-        self.max_nnz = int(self.row_counts.max(initial=0))
-        self._mask = dense != 0
-
-    @lru_cache(maxsize=16)
-    def block_occupancy(self, br: int, bc: int) -> tuple[int, int]:
-        """(#occupied blocks, max occupied blocks per block-row)."""
-        pr, pc = ceil_to(self.n_rows, br), ceil_to(self.n_cols, bc)
-        m = np.zeros((pr, pc), dtype=bool)
-        m[: self.n_rows, : self.n_cols] = self._mask
-        occ = m.reshape(pr // br, br, pc // bc, bc).any(axis=(1, 3))
-        per_row = occ.sum(axis=1)
-        return int(occ.sum()), int(per_row.max(initial=0))
-
-    @lru_cache(maxsize=16)
-    def sell_storage(self, C: int, q: int) -> tuple[int, int]:
-        """(total stored elems, max width) for SELL-C-q."""
-        n_slices = (self.n_rows + C - 1) // C
-        total, maxw = 0, 0
-        for s in range(n_slices):
-            w = int(self.row_counts[s * C : (s + 1) * C].max(initial=0))
-            w = ceil_to(max(w, 1), q)
-            total += w * C
-            maxw = max(maxw, w)
-        return total, maxw
-
-
-@dataclass(frozen=True)
-class KernelFootprint:
-    """Work/traffic summary of one (matrix, format, schedule) point."""
-
-    useful_flops: float
-    total_flops: float  # includes padding compute
-    hbm_bytes: float  # format storage + X + Y traffic
-    gather_elems: float  # in-kernel dynamic gathers
-    scatter_elems: float  # in-kernel scatter-adds
-    grid_steps: float
-    mxu_fraction: float  # fraction of FLOPs running on the MXU
-    vmem_resident_bytes: float  # steady-state VMEM requirement
-    feasible: bool
-    note: str = ""
-
-
 def footprint(
     stats: MatrixStats, fmt: str, schedule: KernelSchedule
 ) -> KernelFootprint:
-    """Exact storage/work statistics for the cost model (no materialization)."""
-    if fmt not in FORMAT_NAMES:
-        raise ValueError(f"unknown format {fmt!r}")
-    n, m, nnz = stats.n_rows, stats.n_cols, stats.nnz
-    rpb, nt = schedule.rows_per_block, schedule.nnz_tile
-    val_b, idx_b = 4.0, 4.0  # fp32 values, int32 indices
-    x_bytes = m * val_b
-    y_bytes = n * val_b
-    useful = 2.0 * nnz
+    """Exact storage/work statistics for the cost model (no materialization).
 
-    if fmt == "ell":
-        width = ceil_to(max(stats.max_nnz, 1), nt)
-        rows = ceil_to(n, rpb)
-        stored = float(rows) * width
-        hbm = stored * (val_b + idx_b) + x_bytes + y_bytes
-        steps = (rows / rpb) * (width / nt)
-        tile_b = rpb * nt * (val_b + idx_b)
-        vmem = 2 * tile_b + (x_bytes if schedule.x_residency == "vmem" else 0) + rpb * val_b
-        return KernelFootprint(useful, 2 * stored, hbm, stored, 0.0, steps, 0.0,
-                               vmem, vmem <= VMEM_BYTES and schedule.x_residency == "vmem",
-                               note="" if schedule.x_residency == "vmem" else
-                               "ELL requires VMEM-resident X on TPU")
-    if fmt == "sell":
-        C = rpb
-        total, maxw = stats.sell_storage(C, nt)
-        n_slices = (n + C - 1) // C
-        stored = float(total)
-        hbm = stored * (val_b + idx_b) + x_bytes + y_bytes
-        steps = n_slices * (maxw / nt)  # grid includes masked tiles
-        tile_b = nt * C * (val_b + idx_b)
-        vmem = 2 * tile_b + (x_bytes if schedule.x_residency == "vmem" else 0) + C * val_b
-        return KernelFootprint(useful, 2 * stored, hbm, stored, 0.0, steps, 0.0,
-                               vmem, vmem <= VMEM_BYTES and schedule.x_residency == "vmem",
-                               note="" if schedule.x_residency == "vmem" else
-                               "SELL requires VMEM-resident X on TPU")
-    if fmt == "csr":
-        nnz_pad = ceil_to(max(nnz, 1), nt)
-        stored = float(nnz_pad)
-        # data + cols + row_ids + indptr + x + y
-        hbm = stored * (val_b + 2 * idx_b) + (n + 1) * idx_b + x_bytes + y_bytes
-        steps = nnz_pad / nt
-        tile_b = nt * (val_b + 2 * idx_b)
-        vmem = 2 * tile_b + x_bytes + (n + 1) * val_b  # y resident too
-        return KernelFootprint(useful, 2 * stored, hbm, stored, stored, steps, 0.0,
-                               vmem, vmem <= VMEM_BYTES and schedule.x_residency == "vmem",
-                               note="" if schedule.x_residency == "vmem" else
-                               "CSR requires VMEM-resident X and Y on TPU")
-    # bell
-    br, bc = min(rpb, 256), LANE
-    n_blocks, max_blocks = stats.block_occupancy(br, bc)
-    nbr = ceil_to(n, br) // br
-    stored_blocks = float(nbr) * max(max_blocks, 1)
-    stored = stored_blocks * br * bc
-    x_traffic = (
-        stored_blocks * bc * val_b  # streamed panels (scalar-prefetch DMA)
-        if schedule.x_residency == "stream"
-        else x_bytes
-    )
-    hbm = stored * val_b + stored_blocks * idx_b + x_traffic + y_bytes
-    steps = stored_blocks
-    tile_b = br * bc * val_b + bc * val_b
-    vmem = 2 * tile_b + br * val_b + (x_bytes if schedule.x_residency == "vmem" else 0)
-    return KernelFootprint(useful, 2 * stored, hbm, 0.0, 0.0, steps, 1.0,
-                           vmem, vmem <= VMEM_BYTES)
+    The per-format footprint models live on each registered ``FormatSpec``
+    (``repro.sparse.registry``); this is the string-keyed entrypoint the
+    cost model and benchmarks use."""
+    return get_format(fmt).footprint(stats, schedule)
 
 
 @dataclass(frozen=True)
@@ -327,7 +223,7 @@ def measure_cpu_formats(
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(size=dense.shape[1]).astype(np.float32))
     out = {}
-    for fmt in FORMAT_NAMES:
+    for fmt in format_names():
         mat = from_dense(dense, fmt)
         res = measure_wall_time(lambda: spmv(mat, x), warmup=warmup, reps=reps)
         out[fmt] = res["mean_s"]

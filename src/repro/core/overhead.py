@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.core.features import SparsityFeatures, extract_features
 from repro.ml.linear import Ridge
-from repro.sparse.formats import FORMAT_NAMES, from_dense
+from repro.sparse.formats import from_dense
+from repro.sparse.registry import format_names
 from repro.utils.logging import get_logger
 
 log = get_logger("core.overhead")
@@ -36,7 +37,7 @@ def measure_overheads(dense: np.ndarray, name: str = "?") -> OverheadSample:
     feats = extract_features(dense)
     f_latency = time.perf_counter() - t0
     c_latency = {}
-    for fmt in FORMAT_NAMES:
+    for fmt in format_names():
         t0 = time.perf_counter()
         from_dense(dense, fmt)
         c_latency[fmt] = time.perf_counter() - t0
@@ -59,7 +60,10 @@ class OverheadPredictor:
     def fit(self, samples: list[OverheadSample]) -> "OverheadPredictor":
         X = np.stack([_design_row(s.features) for s in samples])
         self._f_model = Ridge(alpha=1e-3).fit(X, np.array([s.f_latency for s in samples]))
-        for fmt in FORMAT_NAMES:
+        # fit one model per format the samples actually measured (a plugin
+        # registered after sampling has no c-latency column to learn from)
+        fmts = sorted(set.intersection(*(set(s.c_latency) for s in samples)))
+        for fmt in fmts:
             y = np.array([s.c_latency[fmt] for s in samples])
             self._c_models[fmt] = Ridge(alpha=1e-3).fit(X, y)
         return self
@@ -70,7 +74,14 @@ class OverheadPredictor:
 
     def predict_c(self, features: SparsityFeatures, fmt: str) -> float:
         x = _design_row(features)[None, :]
-        return float(max(self._c_models[fmt].predict(x)[0], 0.0))
+        model = self._c_models.get(fmt)
+        if model is None:
+            # format registered after the overhead samples were taken: be
+            # conservative and charge the worst measured conversion cost
+            return float(
+                max(max(m.predict(x)[0] for m in self._c_models.values()), 0.0)
+            )
+        return float(max(model.predict(x)[0], 0.0))
 
     def total_overhead(
         self, features: SparsityFeatures, fmt: str, inference_latency: float = 2e-3

@@ -26,7 +26,7 @@ from repro.core.tuning_space import ALL_KNOBS, KNOBS, TuningConfig
 from repro.kernels.common import KernelSchedule
 from repro.ml.metrics import accuracy_score
 from repro.ml.model_zoo import CLASSIFIER_ZOO, REGRESSOR_ZOO
-from repro.sparse.formats import FORMAT_NAMES
+from repro.sparse.registry import default_format, format_names
 from repro.utils.logging import get_logger
 
 log = get_logger("core.predictor")
@@ -38,9 +38,15 @@ def _feature_matrix(features_list: list[SparsityFeatures]) -> np.ndarray:
     return np.stack([f.log_vector() for f in features_list])
 
 
-def _config_row(config: TuningConfig) -> np.ndarray:
+def _config_row(
+    config: TuningConfig, fmt_names: tuple[str, ...] | None = None
+) -> np.ndarray:
     s = config.schedule
-    fmt_onehot = [1.0 if config.fmt == f else 0.0 for f in FORMAT_NAMES]
+    names = fmt_names if fmt_names is not None else format_names()
+    # one-hot over the format vocabulary frozen at fit time: a format
+    # registered *after* fitting encodes as all-zeros instead of shifting
+    # the feature layout under a fitted regressor
+    fmt_onehot = [1.0 if config.fmt == f else 0.0 for f in names]
     return np.array(
         fmt_onehot
         + [
@@ -75,6 +81,8 @@ class AutoSpmvPredictor:
         self.format_clf_: dict[str, object] = {}
         self.knob_clf_: dict[tuple[str, str], object] = {}
         self.regressor_: dict[str, object] = {}
+        # freeze the format vocabulary for the regressors' config encoding
+        self.format_names_: tuple[str, ...] = format_names()
         matrices = dataset.matrices
 
         feats, fmt_labels, knob_labels = [], {o: [] for o in OBJECTIVES}, {}
@@ -87,8 +95,11 @@ class AutoSpmvPredictor:
                 # run-time mode label: best format over the full space
                 best_fmt = dataset.best_record(m, obj).config.fmt
                 fmt_labels[obj].append(best_fmt)
-                # compile-time mode labels: best knob values with CSR fixed
-                best_cfg = dataset.best_record(m, obj, formats=("csr",)).config
+                # compile-time mode labels: best knob values with the
+                # default (held) format fixed
+                best_cfg = dataset.best_record(
+                    m, obj, formats=(default_format(),)
+                ).config
                 for knob in ALL_KNOBS:
                     field_, _ = KNOBS[knob]
                     knob_labels[(obj, knob)].append(
@@ -111,7 +122,12 @@ class AutoSpmvPredictor:
             )
             recs = [recs[i] for i in sel]
         Xr = np.stack(
-            [np.concatenate([r.features.log_vector(), _config_row(r.config)]) for r in recs]
+            [
+                np.concatenate(
+                    [r.features.log_vector(), _config_row(r.config, self.format_names_)]
+                )
+                for r in recs
+            ]
         )
         for obj in OBJECTIVES:
             y = np.array([r.objective(obj) for r in recs])
@@ -169,7 +185,8 @@ class AutoSpmvPredictor:
     def estimate_objective(
         self, features: SparsityFeatures, config: TuningConfig, objective: str
     ) -> float:
-        x = np.concatenate([features.log_vector(), _config_row(config)])[None, :]
+        names = getattr(self, "format_names_", None)
+        x = np.concatenate([features.log_vector(), _config_row(config, names)])[None, :]
         return float(np.exp(self.regressor_[objective].predict(x)[0]))
 
 

@@ -55,7 +55,7 @@ from repro.kernels.ops import (
     kernel_memoized,
     matrix_fingerprint,
 )
-from repro.sparse.formats import FORMAT_NAMES
+from repro.sparse.registry import default_format, format_names
 from repro.utils.logging import get_logger
 
 log = get_logger("core.session")
@@ -217,13 +217,14 @@ class AutoSpmvSession:
         objective: str,
         mode: str = "compile",
         *,
-        current_format: str = "csr",
+        current_format: str | None = None,
         schedule: KernelSchedule = DEFAULT_SCHEDULE,
     ) -> tuple[str, str, str]:
         """The cache key a request with these features resolves to.
 
         Callers (e.g. the SpMV server's hit reporting) should use this
         instead of re-deriving bucket/mode strings from cache internals."""
+        current_format = current_format or default_format()
         m = mode if mode == "compile" else _run_mode_key(current_format, schedule)
         return (self.cache.bucket_of(features), objective, m)
 
@@ -247,7 +248,7 @@ class AutoSpmvSession:
                     bucket=bucket,
                     objective=objective,
                     mode="compile",
-                    fmt="csr",
+                    fmt=default_format(),
                     schedule=plan.schedule.as_dict(),
                     predicted=dict(plan.predicted),
                 )
@@ -256,7 +257,7 @@ class AutoSpmvSession:
         else:
             self.stats.cache_hits += 1
         schedule = entry.kernel_schedule()
-        kernel = self._compile(dense, fp, "csr", schedule)
+        kernel = self._compile(dense, fp, default_format(), schedule)
         return CompileTimeResult(feats, schedule, kernel, dict(entry.predicted))
 
     # -------------------------------------------------------------- run time
@@ -266,10 +267,11 @@ class AutoSpmvSession:
         objective: str = "latency",
         *,
         n_iterations: int = 1000,
-        current_format: str = "csr",
+        current_format: str | None = None,
         schedule: KernelSchedule = DEFAULT_SCHEDULE,
         fingerprint: str | None = None,
     ) -> RunTimeResult:
+        current_format = current_format or default_format()
         self.stats.requests += 1
         fp, feats, bucket = self._analyze(dense, fingerprint)
         mode = _run_mode_key(current_format, schedule)
@@ -389,7 +391,7 @@ class AutoSpmvSession:
 
         Computed (and cached) via ``plan_run_time`` on first sight, so the
         classifier's opinion is the arm the bandit starts from."""
-        mode = _run_mode_key("csr", DEFAULT_SCHEDULE)
+        mode = _run_mode_key(default_format(), DEFAULT_SCHEDULE)
         entry = self.cache.peek(bucket, objective, mode)
         if entry is None:
             plan = self.tuner.plan_run_time(feats, objective)
@@ -456,21 +458,22 @@ class AutoSpmvSession:
         key = self.plan_key(feats, objective)
         pre_existing = self.cache.peek(*key) is not None
         base = self.compile_time_optimize(dense, objective, fingerprint=fp)
-        fmt, exploratory = "csr", False
+        default_fmt = default_format()
+        fmt, exploratory = default_fmt, False
         if self.adaptive is not None:
             incumbent = self._incumbent_format(feats, bucket, objective)
             fmt, exploratory = self.adaptive.choose(
                 bucket,
                 objective,
                 incumbent,
-                FORMAT_NAMES,
+                format_names(),
                 prior_value=self._predicted_latency(
                     feats, bucket, objective, incumbent, base.schedule
                 ),
             )
             if exploratory:
                 self.stats.explorations += 1
-        if fmt == "csr":
+        if fmt == default_fmt:
             kernel = base.kernel
         else:
             try:
@@ -478,18 +481,19 @@ class AutoSpmvSession:
             except Exception as exc:
                 # an exploratory format can be infeasible for this matrix
                 # (storage blow-up, tile mismatch): serving must not fail on
-                # a bandit probe — fall back to the compile-time CSR kernel
-                # and retire the arm so the failure is paid once, not per
-                # request
+                # a bandit probe — fall back to the compile-time default-
+                # format kernel and retire the arm so the failure is paid
+                # once, not per request
                 log.warning(
-                    "serve: %s infeasible for bucket %s (%s); serving csr",
+                    "serve: %s infeasible for bucket %s (%s); serving %s",
                     fmt,
                     bucket,
                     exc,
+                    default_fmt,
                 )
                 if self.adaptive is not None:
                     self.adaptive.disable(bucket, objective, fmt)
-                fmt, exploratory, kernel = "csr", False, base.kernel
+                fmt, exploratory, kernel = default_fmt, False, base.kernel
         return ServedPlan(
             fingerprint=fp,
             features=feats,

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Iterator
+from typing import Iterator, Sequence
 
 from repro.kernels.common import (
     ACCUM_DTYPE_CHOICES,
@@ -25,7 +25,7 @@ from repro.kernels.common import (
     X_RESIDENCY_CHOICES,
     KernelSchedule,
 )
-from repro.sparse.formats import FORMAT_NAMES
+from repro.sparse.registry import default_format, format_names
 
 
 @dataclass(frozen=True)
@@ -39,7 +39,13 @@ class TuningConfig:
         return d
 
 
-DEFAULT_CONFIG = TuningConfig("csr", DEFAULT_SCHEDULE)
+def __getattr__(name):
+    if name == "DEFAULT_CONFIG":
+        # resolved per access (PEP 562), not frozen at import: a plugin that
+        # registers itself below the seeds' priority becomes the default
+        # everywhere at once — including this baseline config
+        return TuningConfig(default_format(), DEFAULT_SCHEDULE)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 # paper knob name -> (KernelSchedule field, choices)
 KNOBS: dict[str, tuple[str, tuple]] = {
@@ -75,17 +81,22 @@ def schedule_space(
         )
 
 
-def full_space(formats=FORMAT_NAMES, **schedule_kw) -> Iterator[TuningConfig]:
-    """The run-time-mode space: format x schedule."""
-    for fmt in formats:
+def full_space(
+    formats: Sequence[str] | None = None, **schedule_kw
+) -> Iterator[TuningConfig]:
+    """The run-time-mode space: format x schedule.
+
+    ``formats`` defaults to every *registered* format (including plugins
+    registered via ``repro.sparse.registry.register_format``)."""
+    for fmt in format_names() if formats is None else formats:
         for sched in schedule_space(**schedule_kw):
             yield TuningConfig(fmt, sched)
 
 
 def compile_time_space(**schedule_kw) -> Iterator[TuningConfig]:
-    """The compile-time-mode space: CSR fixed (paper §5.2 step 3), schedule
-    free."""
-    return full_space(formats=("csr",), **schedule_kw)
+    """The compile-time-mode space: the default (held) format fixed
+    (paper §5.2 step 3 — CSR), schedule free."""
+    return full_space(formats=(default_format(),), **schedule_kw)
 
 
 def knob_value(config: TuningConfig, knob: str):

@@ -31,8 +31,19 @@ from jax.experimental.pallas import tpu as pltpu
 # import the alias so either jax works.
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-LANE = 128
-SUBLANE = 8
+LANE = 128  # TPU vector lane quantum — the single source of truth
+SUBLANE = 8  # TPU sublane quantum (sparse/formats re-exports both)
+
+
+class InfeasibleConfig(ValueError):
+    """Raised when a (format, schedule) pair cannot be materialized.
+
+    The tuner's search space contains invalid points (exactly as on GPU,
+    where e.g. a thread-block size can exceed resource limits); the dataset
+    harness records them as failures rather than crashing. Format plugins
+    raise this from their ``prepare``/``spmv`` entrypoints (see
+    ``repro.sparse.registry.FormatSpec``).
+    """
 
 # Discrete choice sets — the tuning space the classifiers predict over.
 ROWS_PER_BLOCK_CHOICES = (8, 16, 32, 64, 128, 256, 512)

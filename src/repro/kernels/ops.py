@@ -3,7 +3,15 @@
 ``prepare`` converts a dense matrix into the requested format with storage
 geometry matched to a ``KernelSchedule`` (the compile-time parameters the
 Auto-SpMV predictor emits), and ``spmv_pallas`` runs the matching Pallas
-kernel. Alignment padding lives here so the kernels stay tile-exact.
+kernel. Both are thin lookups into the pluggable format registry
+(``repro.sparse.registry``): the per-format conversion, alignment padding,
+feasibility checks, and kernel binding live on each ``FormatSpec``, so a
+format registered at runtime is served here with no code change.
+
+The registry import is deliberately lazy (inside the functions): this module
+is imported by ``repro.kernels.__init__``, which the sparse substrate itself
+imports for the tiling constants — a module-level registry import would
+close that cycle during package initialization.
 """
 
 from __future__ import annotations
@@ -11,163 +19,63 @@ from __future__ import annotations
 import hashlib
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Hashable, Union
+from typing import Any, Hashable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.bell import bell_spmv_pallas
 from repro.kernels.common import (
-    LANE,
     DEFAULT_SCHEDULE,
+    InfeasibleConfig,  # noqa: F401  (canonical home moved to kernels.common)
     KernelSchedule,
-    ceil_to,
-    pad_axis,
-)
-from repro.kernels.csr import csr_spmv_pallas
-from repro.kernels.ell import ell_spmm_pallas, ell_spmv_pallas
-from repro.kernels.sell import sell_spmv_pallas
-from repro.sparse.formats import (
-    BELL,
-    CSR,
-    ELL,
-    SELL,
-    bell_from_dense,
-    csr_from_dense,
-    ell_from_dense,
-    sell_from_dense,
 )
 
 
-class InfeasibleConfig(ValueError):
-    """Raised when a (format, schedule) pair cannot be materialized.
+def __getattr__(name):
+    if name == "MAX_STORAGE_BYTES":
+        # deprecated alias: the live bound moved to the format registry;
+        # resolve it there so the two names can never drift apart
+        from repro.sparse.registry import MAX_STORAGE_BYTES
 
-    The tuner's search space contains invalid points (exactly as on GPU,
-    where e.g. a thread-block size can exceed resource limits); the dataset
-    harness records them as failures rather than crashing.
-    """
-
-
-MAX_STORAGE_BYTES = 512 * 1024 * 1024  # refuse >512 MiB single-format storage
-
-
-def _check_bytes(estimate: int, what: str) -> None:
-    if estimate > MAX_STORAGE_BYTES:
-        raise InfeasibleConfig(f"{what} storage would be {estimate/1e6:.0f} MB")
+        return MAX_STORAGE_BYTES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def prepare(
     dense: np.ndarray, fmt: str, schedule: KernelSchedule = DEFAULT_SCHEDULE
-) -> Union[CSR, ELL, BELL, SELL]:
+) -> Any:
     """Convert ``dense`` to ``fmt`` with schedule-aligned storage geometry."""
-    dense = np.asarray(dense)
-    n_rows, n_cols = dense.shape
-    rpb, nt = schedule.rows_per_block, schedule.nnz_tile
-    if fmt == "csr":
-        return csr_from_dense(dense)
-    if fmt == "ell":
-        counts_max = int((dense != 0).sum(axis=1).max(initial=0))
-        width = ceil_to(max(counts_max, 1), nt)
-        _check_bytes(ceil_to(n_rows, rpb) * width * 8, "ELL")
-        mat = ell_from_dense(dense, min_width=width)
-        data = pad_axis(np.asarray(mat.data), 0, ceil_to(n_rows, rpb))
-        cols = pad_axis(np.asarray(mat.cols), 0, ceil_to(n_rows, rpb))
-        return ELL(jnp.asarray(data), jnp.asarray(cols), shape=mat.shape)
-    if fmt == "bell":
-        br = min(rpb, 256)
-        nbr = ceil_to(n_rows, br) // br
-        # upper-bound occupancy estimate before materializing
-        occ_bound = min((dense != 0).sum(), nbr * (ceil_to(n_cols, LANE) // LANE))
-        _check_bytes(int(occ_bound) * br * LANE * 8 // max(nbr, 1) * nbr, "BELL")
-        return bell_from_dense(dense, br=br, bc=LANE)
-    if fmt == "sell":
-        return sell_from_dense(dense, C=rpb, q=nt)
-    raise ValueError(f"unknown format {fmt!r}")
+    from repro.sparse.registry import get_format
+
+    return get_format(fmt).prepare(np.asarray(dense), schedule)
 
 
 def spmv_pallas(
-    mat: Union[CSR, ELL, BELL, SELL],
+    mat: Any,
     x: jax.Array,
     schedule: KernelSchedule = DEFAULT_SCHEDULE,
     *,
     interpret: bool = True,
 ) -> jax.Array:
     """Run the Pallas SpMV kernel matching ``type(mat)``; returns y: (n_rows,)."""
-    n_rows, n_cols = mat.shape
-    x = jnp.asarray(x)
-    rpb, nt = schedule.rows_per_block, schedule.nnz_tile
+    from repro.sparse.registry import spec_for
 
-    if isinstance(mat, ELL):
-        R, W = mat.data.shape
-        if R % rpb or W % nt:
-            raise InfeasibleConfig(
-                f"ELL planes ({R},{W}) not aligned to schedule ({rpb},{nt}); "
-                "use prepare() with the same schedule"
-            )
-        y = ell_spmv_pallas(mat.data, mat.cols, x, schedule, interpret=interpret)
-        return y[:n_rows]
-
-    if isinstance(mat, CSR):
-        nnz = mat.data.shape[0]
-        nnz_pad = ceil_to(max(nnz, 1), nt)
-        data = pad_axis(np.asarray(mat.data), 0, nnz_pad)
-        indices = pad_axis(np.asarray(mat.indices), 0, nnz_pad)
-        row_ids = pad_axis(np.asarray(mat.row_ids), 0, nnz_pad, fill=n_rows)
-        y = csr_spmv_pallas(
-            jnp.asarray(data),
-            jnp.asarray(indices),
-            jnp.asarray(row_ids),
-            x,
-            n_rows,
-            schedule,
-            interpret=interpret,
-        )
-        return y[:n_rows]
-
-    if isinstance(mat, BELL):
-        xp = jnp.zeros(ceil_to(n_cols, mat.bc), x.dtype).at[:n_cols].set(x)
-        x_panels = xp.reshape(-1, mat.bc)
-        y = bell_spmv_pallas(mat.data, mat.block_cols, x_panels, schedule, interpret=interpret)
-        return y.reshape(-1)[:n_rows]
-
-    if isinstance(mat, SELL):
-        C = mat.C
-        blk = nt * C
-        sp = np.asarray(mat.slice_ptr)
-        sw = np.asarray(mat.slice_width)
-        if mat.data.shape[0] % blk or (sp % blk).any() or (sw % nt).any():
-            raise InfeasibleConfig(
-                f"SELL storage quantum mismatch with nnz_tile={nt}; "
-                "convert with prepare(..., schedule) so widths are nt-aligned"
-            )
-        width_tiles = (sw // nt).astype(np.int32)
-        tile_ptr = (sp[:-1] // blk).astype(np.int32)
-        y = sell_spmv_pallas(
-            mat.data,
-            mat.cols,
-            jnp.asarray(tile_ptr),
-            jnp.asarray(width_tiles),
-            x,
-            n_slices=mat.n_slices,
-            C=C,
-            max_width_tiles=int(width_tiles.max(initial=1)),
-            schedule=schedule,
-            interpret=interpret,
-        )
-        return y.reshape(-1)[:n_rows]
-
-    raise TypeError(f"unsupported format {type(mat)}")
+    return spec_for(mat).spmv(mat, x, schedule, interpret=interpret)
 
 
 def spmm_pallas(
-    mat: ELL,
+    mat: Any,
     X: jax.Array,
     schedule: KernelSchedule = DEFAULT_SCHEDULE,
     *,
     interpret: bool = True,
 ) -> jax.Array:
     """Multi-vector SpMV (ELL only — the MoE-dispatch shape)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ell import ell_spmm_pallas
+    from repro.sparse.formats import ELL
+
     if not isinstance(mat, ELL):
         raise TypeError("spmm_pallas currently supports ELL")
     n_rows = mat.shape[0]
@@ -180,7 +88,7 @@ def spmm_pallas(
 class PreparedSpmv:
     """A (format, schedule)-specialized SpMV — what compile-time mode emits."""
 
-    mat: Union[CSR, ELL, BELL, SELL]
+    mat: Any  # a registered format container (CSR / ELL / BELL / SELL / plugin)
     schedule: KernelSchedule
     interpret: bool = True
 
@@ -251,6 +159,20 @@ def kernel_memoized(
 
 def clear_kernel_memo() -> None:
     _KERNEL_MEMO.clear()
+
+
+def evict_kernel_memo_format(fmt: str) -> int:
+    """Drop every memoized kernel of one format.
+
+    Called by the registry when a format is unregistered or re-registered:
+    a memoized ``PreparedSpmv`` must not outlive the ``FormatSpec`` that
+    built it (its container would no longer resolve in ``spec_for``, or
+    would silently run the old implementation)."""
+    stale = [k for k in _KERNEL_MEMO if k[1] == fmt]
+    for k in stale:
+        del _KERNEL_MEMO[k]
+        _MEMO_STATS["evictions"] += 1
+    return len(stale)
 
 
 def compile_spmv(

@@ -31,6 +31,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core.session import AutoSpmvSession, build_tuner
 from repro.models import init_params, model_specs
 from repro.sparse.generate import MATRIX_NAMES, generate_by_name
+from repro.sparse.registry import default_format, format_names
 from repro.train.serve import (
     BatchedServer,
     Request,
@@ -71,6 +72,15 @@ def serve_lm(args) -> list[Request]:
 
 
 def serve_spmv(args) -> list[SpmvRequest]:
+    if args.format_plugins:
+        # plugin modules register extra sparse formats on import; they then
+        # flow through the tuning space, bandit arms, and serving untouched
+        import importlib
+
+        for mod in args.format_plugins.split(","):
+            importlib.import_module(mod.strip())
+        log.info("format registry after plugins: %s", format_names())
+
     t0 = time.time()
     tuner = build_tuner(
         scale=args.spmv_scale, names=MATRIX_NAMES[: args.spmv_train_matrices]
@@ -132,7 +142,7 @@ def serve_spmv(args) -> list[SpmvRequest]:
             "req %d: hit=%s fmt=%s%s rel.err=%.2e %s",
             r.rid,
             r.cache_hit,
-            r.fmt or "csr",
+            r.fmt or default_format(),
             " (explore)" if r.exploratory else "",
             err,
             r.schedule,
@@ -172,6 +182,9 @@ def main(argv=None):
                     help="JSON path for the persistent tuning cache")
     ap.add_argument("--spmv-scale", type=float, default=0.0015)
     ap.add_argument("--spmv-train-matrices", type=int, default=8)
+    ap.add_argument("--format-plugins", default=None,
+                    help="comma-separated modules registering extra sparse "
+                         "formats (e.g. repro.sparse.bcsr)")
     ap.add_argument("--telemetry", action="store_true",
                     help="measure every served kernel and aggregate per-arm stats")
     ap.add_argument("--telemetry-log", default=None,

@@ -101,8 +101,8 @@ def moe_ffn(
     E, K = cfg.n_experts, cfg.top_k
     top_e, top_w, counts, aux = _route(params, x, cfg)
 
-    fmt = cfg.dispatch_format
-    if fmt == "dense":
+    dispatch = cfg.dispatch_format
+    if dispatch == "dense":
         if T * E * cfg.d_ff_expert > (1 << 28):
             raise ValueError(
                 "dense dispatch on a config this large would materialize "
@@ -116,14 +116,14 @@ def moe_ffn(
             lambda g, e, w: g.at[jnp.arange(T)[:, None], e].set(w.astype(cd))
         )(gate_full, top_e, top_w)
         y = jnp.einsum("betd,bte->btd", h, gate_full)
-    elif fmt in ("ell", "sell"):
+    elif dispatch in ("ell", "sell"):
         t_flat = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K)).reshape(-1)
 
         def one_batch(xb, eb, wb, cb):
             e_flat = eb.reshape(-1)
             w_flat = wb.reshape(-1).astype(cd)
             pieces = []
-            if fmt == "ell":
+            if dispatch == "ell":
                 cap = _capacity(T, cfg)
                 idx, wgt = _pack_by_expert(e_flat, t_flat, w_flat, E, cap)
                 buckets = [(jnp.arange(E), idx, wgt)]
@@ -156,7 +156,7 @@ def moe_ffn(
 
         y = jax.vmap(one_batch)(x.astype(cd), top_e, top_w, counts)
     else:
-        raise ValueError(f"unknown dispatch format {fmt!r}")
+        raise ValueError(f"unknown dispatch format {dispatch!r}")
 
     if cfg.n_shared_experts:
         sh = params["shared"]

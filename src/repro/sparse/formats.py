@@ -28,10 +28,13 @@ from typing import Union
 import jax
 import numpy as np
 
-FORMAT_NAMES = ("csr", "ell", "bell", "sell")
+# LANE/SUBLANE live in kernels/common.py (the single source of truth for TPU
+# tiling constants); re-exported here for backward compatibility.
+from repro.kernels.common import LANE, SUBLANE
 
-LANE = 128  # TPU vector lane quantum
-SUBLANE = 8  # TPU sublane quantum
+# Deprecated: the four *seed* formats. New code should use
+# ``repro.sparse.registry.format_names()``, which also covers plugins.
+FORMAT_NAMES = ("csr", "ell", "bell", "sell")
 
 
 def _ceil_to(x: int, q: int) -> int:
@@ -277,53 +280,66 @@ def sell_from_dense(
     )
 
 
-_FROM_DENSE = {
-    "csr": csr_from_dense,
-    "ell": ell_from_dense,
-    "bell": bell_from_dense,
-    "sell": sell_from_dense,
-}
+def _empty_dense(mat) -> np.ndarray:
+    return np.zeros(mat.shape, dtype=np.asarray(mat.data).dtype)
+
+
+def csr_to_dense(mat: CSR) -> np.ndarray:
+    out = _empty_dense(mat)
+    out[np.asarray(mat.row_ids), np.asarray(mat.indices)] = np.asarray(mat.data)
+    return out
+
+
+def ell_to_dense(mat: ELL) -> np.ndarray:
+    out = _empty_dense(mat)
+    n_rows = mat.shape[0]
+    data, cols = np.asarray(mat.data), np.asarray(mat.cols)
+    rows = np.repeat(np.arange(n_rows), data.shape[1])
+    np.add.at(out, (rows, cols.ravel()), data.ravel())
+    return out
+
+
+def bell_to_dense(mat: BELL) -> np.ndarray:
+    out = _empty_dense(mat)
+    n_rows, n_cols = mat.shape
+    data, bcols = np.asarray(mat.data), np.asarray(mat.block_cols)
+    br, bc = mat.br, mat.bc
+    for i in range(data.shape[0]):
+        for j in range(data.shape[1]):
+            r0, c0 = i * br, int(bcols[i, j]) * bc
+            blk = data[i, j]
+            rr = min(br, n_rows - r0)
+            cc = min(bc, n_cols - c0)
+            if rr > 0 and cc > 0:
+                out[r0 : r0 + rr, c0 : c0 + cc] += blk[:rr, :cc]
+    return out
+
+
+def sell_to_dense(mat: SELL) -> np.ndarray:
+    out = _empty_dense(mat)
+    n_rows = mat.shape[0]
+    rid = np.asarray(mat.row_ids)
+    valid = rid < n_rows
+    np.add.at(
+        out,
+        (rid[valid], np.asarray(mat.cols)[valid]),
+        np.asarray(mat.data)[valid],
+    )
+    return out
 
 
 def from_dense(dense: np.ndarray, fmt: str, **kwargs) -> SparseFormat:
-    """Convert a dense matrix to the named format."""
-    if fmt not in _FROM_DENSE:
-        raise ValueError(f"unknown format {fmt!r}; expected one of {FORMAT_NAMES}")
-    return _FROM_DENSE[fmt](dense, **kwargs)
+    """Convert a dense matrix to the named (registered) format."""
+    from repro.sparse.registry import get_format
+
+    return get_format(fmt).from_dense(dense, **kwargs)
 
 
 def to_dense(mat: SparseFormat) -> np.ndarray:
-    """Densify any format (host-side; the inverse of the converters)."""
-    n_rows, n_cols = mat.shape
-    out = np.zeros((n_rows, n_cols), dtype=np.asarray(mat.data).dtype)
-    if isinstance(mat, CSR):
-        out[np.asarray(mat.row_ids), np.asarray(mat.indices)] = np.asarray(mat.data)
-    elif isinstance(mat, ELL):
-        data, cols = np.asarray(mat.data), np.asarray(mat.cols)
-        rows = np.repeat(np.arange(n_rows), data.shape[1])
-        np.add.at(out, (rows, cols.ravel()), data.ravel())
-    elif isinstance(mat, BELL):
-        data, bcols = np.asarray(mat.data), np.asarray(mat.block_cols)
-        br, bc = mat.br, mat.bc
-        for i in range(data.shape[0]):
-            for j in range(data.shape[1]):
-                r0, c0 = i * br, int(bcols[i, j]) * bc
-                blk = data[i, j]
-                rr = min(br, n_rows - r0)
-                cc = min(bc, n_cols - c0)
-                if rr > 0 and cc > 0:
-                    out[r0 : r0 + rr, c0 : c0 + cc] += blk[:rr, :cc]
-    elif isinstance(mat, SELL):
-        rid = np.asarray(mat.row_ids)
-        valid = rid < n_rows
-        np.add.at(
-            out,
-            (rid[valid], np.asarray(mat.cols)[valid]),
-            np.asarray(mat.data)[valid],
-        )
-    else:
-        raise TypeError(f"unknown sparse format: {type(mat)}")
-    return out
+    """Densify any registered format (host-side; inverse of the converters)."""
+    from repro.sparse.registry import spec_for
+
+    return spec_for(mat).to_dense(mat)
 
 
 def convert(mat: SparseFormat, fmt: str, **kwargs) -> SparseFormat:

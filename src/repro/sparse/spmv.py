@@ -64,8 +64,21 @@ _DISPATCH = {CSR: spmv_csr, ELL: spmv_ell, BELL: spmv_bell, SELL: spmv_sell}
 
 
 def spmv(mat: SparseFormat, x: jax.Array) -> jax.Array:
-    """Format-dispatching SpMV."""
-    return _DISPATCH[type(mat)](mat, x)
+    """Format-dispatching SpMV.
+
+    Routed through the registry so an overwritten or plugin spec's
+    ``reference`` is honored; the static table only serves containers the
+    registry does not know (e.g. a seed format that was unregistered)."""
+    from repro.sparse.registry import spec_for
+
+    try:
+        spec = spec_for(mat)
+    except TypeError:
+        fn = _DISPATCH.get(type(mat))
+        if fn is None:
+            raise
+        return fn(mat, x)
+    return spec.reference(mat, x)
 
 
 @jax.jit

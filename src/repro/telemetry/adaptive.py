@@ -137,14 +137,19 @@ class AdaptiveFormatSelector:
         return min(cands)[1] if cands else None
 
     def disable(
-        self, bucket: str, objective: str, fmt: str, *, fallback: str = "csr"
+        self, bucket: str, objective: str, fmt: str, *, fallback: str | None = None
     ) -> None:
         """Mark a format unservable for this cell (conversion infeasible):
         ``choose`` will never pick it again, so a failed exploration is paid
         once per cell, not once per request. If the *incumbent* itself is
         disabled (the cached plan was infeasible), the measured-best arm —
-        or ``fallback``, the format the caller actually served — takes over,
-        so a budget-closed ``choose`` never returns an unservable arm."""
+        or ``fallback``, the format the caller actually served (defaulting
+        to the registry's default format) — takes over, so a budget-closed
+        ``choose`` never returns an unservable arm."""
+        if fallback is None:
+            from repro.sparse.registry import default_format
+
+            fallback = default_format()
         cell = self._cells.get((bucket, objective))
         if cell is None:
             return
