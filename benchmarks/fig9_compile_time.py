@@ -13,6 +13,7 @@ import numpy as np
 from benchmarks.common import get_dataset, improvement_pct, print_table, save_result
 from repro.core import OBJECTIVES, AutoSpmvPredictor, PredictorConfig, TuningConfig
 from repro.core.dataset import TuningDataset
+from repro.sparse import default_format
 
 
 def _loo_predicted_gain(ds: TuningDataset, matrix: str, obj: str) -> float:
@@ -21,7 +22,7 @@ def _loo_predicted_gain(ds: TuningDataset, matrix: str, obj: str) -> float:
     pred = AutoSpmvPredictor(PredictorConfig(max_regressor_samples=600)).fit(loo)
     feats = ds.for_matrix(matrix)[0].features
     sched = pred.predict_schedule(feats, obj)
-    cfg = TuningConfig("csr", sched)
+    cfg = TuningConfig(default_format(), sched)
     rec = next((r for r in ds.for_matrix(matrix) if r.config == cfg), None)
     default = ds.default_record(matrix)
     if rec is None or not rec.feasible:
@@ -38,7 +39,7 @@ def run(scale_name: str = "paper", loo_subset: int = 6) -> dict:
         default = ds.default_record(m)
         gains = {}
         for obj in OBJECTIVES:
-            best = ds.best_record(m, obj, formats=("csr",))
+            best = ds.best_record(m, obj, formats=(default_format(),))
             gains[obj] = improvement_pct(default.objective(obj), best.objective(obj), obj)
         payload["per_matrix"][m] = gains
         rows.append([m] + [gains[o] for o in OBJECTIVES])

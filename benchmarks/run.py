@@ -2,13 +2,21 @@
 report. ``python -m benchmarks.run [--scale ci|paper] [--only fig9,table5]``.
 
 ``--smoke`` is the sub-minute CI tier: only the benches tagged smoke-capable
-(the session-cache and adaptive-telemetry ones, which skip dataset-wide
-predictor sweeps) at the smallest scale.
+(the session-cache, adaptive-telemetry, partition, and format-sweep ones,
+which skip dataset-wide predictor sweeps) at the smallest scale.
+
+Every run also writes a machine-readable ``BENCH_PR5.json`` next to the
+other artifacts (``artifacts/bench/`` by default): one record per executed
+benchmark with its name, scale, duration, and the numeric metrics flattened
+out of the payload its ``run()`` returned. CI runs the smoke tier and
+uploads the artifact, so the bench trajectory is a queryable time series
+instead of log text.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
@@ -23,6 +31,7 @@ BENCHES = [
     ("table7", "benchmarks.table7_overhead", "Table 7 + Fig.6 overheads"),
     ("session_cache", "benchmarks.bench_session_cache", "Session cache cold vs warm"),
     ("adaptive", "benchmarks.bench_adaptive", "Telemetry bandit misprediction recovery"),
+    ("partition", "benchmarks.bench_partition", "Partitioned vs monolithic SpMV"),
     ("fig12", "benchmarks.fig12_sensitivity", "Fig.12 hardware sensitivity"),
     ("roofline", "benchmarks.roofline", "Roofline report (dry-run artifacts)"),
     # keep last: activates the bcsr plugin, which widens the registry for the
@@ -30,7 +39,54 @@ BENCHES = [
     ("formats", "benchmarks.bench_formats", "Registered-format sweep incl. bcsr plugin"),
 ]
 
-SMOKE_BENCHES = ("session_cache", "adaptive", "formats")
+SMOKE_BENCHES = ("session_cache", "adaptive", "partition", "formats")
+
+RESULTS_FILE = "BENCH_PR5.json"
+_MAX_METRICS = 400  # per bench: keep the artifact readable, not exhaustive
+
+
+def _numeric_metrics(payload, prefix: str = "", out: dict | None = None) -> dict:
+    """Flatten a bench payload into "path/to/leaf" -> number entries.
+
+    Non-numeric leaves are dropped; non-string keys (some benches key on
+    tuples) are stringified. Bounded so a dataset-sized payload cannot bloat
+    the artifact.
+    """
+    if out is None:
+        out = {}
+    if len(out) >= _MAX_METRICS:
+        return out
+    if isinstance(payload, bool):
+        out[prefix] = int(payload)
+    elif isinstance(payload, (int, float)) and not isinstance(payload, bool):
+        out[prefix] = float(payload)
+    elif isinstance(payload, dict):
+        for k, v in payload.items():
+            key = f"{prefix}/{k}" if prefix else str(k)
+            _numeric_metrics(v, key, out)
+    elif isinstance(payload, (list, tuple)):
+        for i, v in enumerate(payload):
+            _numeric_metrics(v, f"{prefix}/{i}" if prefix else str(i), out)
+    return out
+
+
+def write_results(records: list[dict], scale: str, total_s: float) -> str:
+    from benchmarks.common import ART
+
+    ART.mkdir(parents=True, exist_ok=True)
+    path = ART / RESULTS_FILE
+    path.write_text(
+        json.dumps(
+            {
+                "scale": scale,
+                "total_s": total_s,
+                "benchmarks": records,
+            },
+            indent=1,
+            default=float,
+        )
+    )
+    return str(path)
 
 
 def main(argv=None) -> int:
@@ -48,23 +104,32 @@ def main(argv=None) -> int:
     else:
         only = None
 
-    failures = []
+    failures, records = [], []
     t_all = time.time()
     for name, module, title in BENCHES:
         if only and name not in only:
             continue
         print(f"\n{'='*72}\n[{name}] {title}\n{'='*72}")
         t0 = time.time()
+        record = {"name": name, "title": title, "scale": scale}
         try:
             import importlib
 
             mod = importlib.import_module(module)
-            mod.run(scale)
+            payload = mod.run(scale)
+            record["ok"] = True
+            record["metrics"] = _numeric_metrics(payload) if payload else {}
             print(f"[{name}] done in {time.time()-t0:.1f}s")
         except Exception:
             traceback.print_exc()
             failures.append(name)
-    print(f"\nall benchmarks finished in {time.time()-t_all:.1f}s")
+            record["ok"] = False
+            record["error"] = traceback.format_exc(limit=3)
+        record["duration_s"] = time.time() - t0
+        records.append(record)
+    total_s = time.time() - t_all
+    results_path = write_results(records, scale, total_s)
+    print(f"\nall benchmarks finished in {total_s:.1f}s; results -> {results_path}")
     if failures:
         print(f"FAILED: {failures}")
         return 1

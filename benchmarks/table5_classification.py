@@ -15,6 +15,7 @@ from repro.core.dataset import TuningDataset
 from repro.core.hpo import tune_model
 from repro.ml.metrics import accuracy_score, f1_score
 from repro.ml.model_zoo import CLASSIFIER_ZOO
+from repro.sparse import default_format
 
 
 def _labels(ds: TuningDataset, matrices, obj, knob):
@@ -22,7 +23,7 @@ def _labels(ds: TuningDataset, matrices, obj, knob):
     X, y = [], []
     for m in matrices:
         X.append(ds.for_matrix(m)[0].features.log_vector())
-        best = ds.best_record(m, obj, formats=("csr",)).config
+        best = ds.best_record(m, obj, formats=(default_format(),)).config
         y.append(str(getattr(best.schedule, field)))
     return np.stack(X), np.array(y)
 

@@ -38,6 +38,7 @@ from repro.core.overhead import OverheadPredictor, OverheadSample, measure_overh
 from repro.core.predictor import AutoSpmvPredictor, PredictorConfig
 from repro.core.session import (
     AutoSpmvSession,
+    PartitionedResult,
     ServedPlan,
     SessionStats,
     build_tuner,
@@ -68,6 +69,7 @@ __all__ = [
     "CacheEntry",
     "CompileTimePlan",
     "CompileTimeResult",
+    "PartitionedResult",
     "RunTimePlan",
     "RunTimeResult",
     "ServedPlan",

@@ -153,6 +153,34 @@ class AutoSpMV:
         )
         return RunTimePlan(best_fmt, gain, lat_cur - lat_new, oh, c_term)
 
+    def plan_partitioned(
+        self,
+        dense: np.ndarray,
+        objective: str = "latency",
+        *,
+        block_counts: tuple[int, ...] | None = None,
+    ):
+        """Partitioned run-time mode: split the matrix into nnz-balanced row
+        blocks, run the format/schedule predictors per block, and search
+        block counts {1, 2, 4, 8} — the monolithic plan stays the baseline
+        and wins ties, so homogeneous matrices keep one block. Returns a
+        ``repro.partition.plan.CompositePlan``.
+
+        Unlike ``plan_compile_time``/``plan_run_time`` this takes the dense
+        matrix, not just features: block boundaries and per-block stats need
+        the actual row histogram. The import is lazy — ``repro.partition``
+        sits above ``repro.core`` in the layering.
+        """
+        from repro.partition.partitioner import SUPPORTED_BLOCK_COUNTS
+        from repro.partition.plan import plan_partitioned
+
+        counts = (
+            tuple(block_counts) if block_counts is not None else SUPPORTED_BLOCK_COUNTS
+        )
+        return plan_partitioned(
+            self.predictor, dense, objective, block_counts=counts
+        )
+
     # ------------------------------------------------------------ compile time
     def compile_time_optimize(
         self, dense: np.ndarray, objective: str = "latency"

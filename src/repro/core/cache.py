@@ -50,14 +50,18 @@ def feature_bucket(
 class CacheEntry:
     """One cached tuning decision for a (bucket, objective, mode) key.
 
-    ``mode`` is ``"compile"`` or ``"run:<current_format>"`` — run-time plans
-    depend on the format currently held, so it is part of the identity.
+    ``mode`` is ``"compile"``, ``"run:<current_format>"`` — run-time plans
+    depend on the format currently held, so it is part of the identity — or
+    ``"part:max<k>"`` for partitioned composite plans (the block-count
+    budget is part of the key, so sessions with different ``--max-blocks``
+    never alias).
     """
 
     bucket: str
     objective: str
     mode: str
-    fmt: str  # chosen format ("csr" in compile mode)
+    fmt: str  # chosen format ("csr" in compile mode; "+".joined per-block
+    # formats for partitioned entries)
     schedule: dict  # KernelSchedule.as_dict()
     predicted: dict[str, float] = field(default_factory=dict)
     gain_per_iter: float = 0.0
@@ -67,6 +71,13 @@ class CacheEntry:
     # whose prepared kernel is not in the process memo (fresh process /
     # different matrix in the same bucket)
     hits: int = 0
+    # partitioned composite plans (repro.partition): chosen block count and
+    # the per-block decisions ({"fmt", "schedule", "latency"} dicts, in row
+    # order). Bucket-mates replay these onto their own nnz-balanced row
+    # boundaries — the *decisions* are bucket-level, the boundaries are not.
+    n_blocks: int = 1
+    blocks: list = field(default_factory=list)
+    monolithic_fmt: str = ""  # the single-format baseline the plan beat
 
     def kernel_schedule(self) -> KernelSchedule:
         return KernelSchedule(**self.schedule)

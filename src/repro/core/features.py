@@ -72,11 +72,21 @@ def features_from_row_counts(counts: np.ndarray, n_rows: int) -> SparsityFeature
     )
 
 
+def row_nnz_counts(dense: np.ndarray) -> np.ndarray:
+    """Nonzeros per row of a dense-held matrix (int64, length ``n_rows``).
+
+    The shared primitive under ``extract_features`` and the row partitioner
+    (``repro.partition``): both need the same histogram, and the partitioner
+    derives every per-block feature vector from slices of this one array, so
+    the Table-7 ``f`` cost is paid once per matrix, not once per block.
+    """
+    return (np.asarray(dense) != 0).sum(axis=1).astype(np.int64)
+
+
 def extract_features(dense: np.ndarray) -> SparsityFeatures:
     """Table-2 features of a dense-held matrix (run-time mode step 1)."""
     dense = np.asarray(dense)
-    counts = (dense != 0).sum(axis=1).astype(np.int64)
-    return features_from_row_counts(counts, dense.shape[0])
+    return features_from_row_counts(row_nnz_counts(dense), dense.shape[0])
 
 
 def features_from_csr_indptr(indptr: np.ndarray) -> SparsityFeatures:

@@ -102,6 +102,38 @@ def _run_mode_key(current_format: str, schedule: KernelSchedule) -> str:
     return f"run:{current_format}:{tag}"
 
 
+def _part_mode_key(max_blocks: int) -> str:
+    """Partitioned plans are keyed by their block-count budget: sessions
+    running with different ``--max-blocks`` must not alias entries."""
+    return f"part:max{max_blocks}"
+
+
+@dataclass(frozen=True)
+class PartitionedResult:
+    """What ``partitioned_optimize`` returns: the composite plan actually
+    applied to this matrix, its executor, and enough identity for
+    ``observe_partitioned`` to feed every (block, format) arm."""
+
+    fingerprint: str
+    features: SparsityFeatures
+    bucket: str
+    objective: str
+    plan: object  # repro.partition.plan.CompositePlan
+    kernel: object  # repro.partition.executor.PartitionedSpmv
+    mode: str  # the cache mode key ("part:max<k>")
+    cache_hit: bool = False
+    served_formats: tuple[str, ...] = ()  # per block, after bandit swaps
+    exploratory: tuple[bool, ...] = ()  # per block: served off the plan
+
+    @property
+    def n_blocks(self) -> int:
+        return self.plan.n_blocks
+
+    @property
+    def formats(self) -> tuple[str, ...]:
+        return self.served_formats or self.plan.formats
+
+
 @dataclass(frozen=True)
 class ServedPlan:
     """What ``serve_optimize`` hands the serving layer: the plan actually
@@ -382,6 +414,258 @@ class AutoSpmvSession:
             objective,
         )
         return [unique[fp] for fp in fps]
+
+    # ------------------------------------------------------------ partitioned
+    def _replay_partitioned(self, dense: np.ndarray, entry: CacheEntry):
+        """Rebuild a ``CompositePlan`` for THIS matrix from a cached entry.
+
+        The cached decisions are bucket-level (per-block format + schedule,
+        in row order); the row boundaries are re-derived from this matrix's
+        own nnz histogram, so a bucket-mate with a shifted hub row still gets
+        balanced blocks. Returns None when the stored block count cannot be
+        realized (fewer rows than blocks) — the caller re-plans."""
+        from repro.partition.partitioner import partition_rows
+        from repro.partition.plan import BlockPlan, CompositePlan
+
+        from repro.core.objectives import ObjectiveValues
+
+        part = partition_rows(dense, entry.n_blocks)
+        if part.n_blocks != entry.n_blocks or len(entry.blocks) != entry.n_blocks:
+            return None
+        plans = tuple(
+            BlockPlan(
+                block=blk,
+                fmt=raw["fmt"],
+                schedule=KernelSchedule(**raw["schedule"]),
+                # replayed plans carry the stored latency estimate only;
+                # full ObjectiveValues live with the entry that planned them
+                modeled=ObjectiveValues(raw.get("latency", 0.0), 0.0, 0.0, 0.0),
+                predicted_fmt=raw.get("predicted_fmt", raw["fmt"]),
+            )
+            for blk, raw in zip(part.blocks, entry.blocks)
+        )
+        modeled = ObjectiveValues(entry.predicted.get("latency", 0.0), 0.0, 0.0, 0.0)
+        monolithic = ObjectiveValues(
+            entry.predicted.get("monolithic_latency", 0.0), 0.0, 0.0, 0.0
+        )
+        return CompositePlan(
+            entry.objective, part, plans, modeled, monolithic,
+            entry.monolithic_fmt or default_format(),
+        )
+
+    def partitioned_optimize(
+        self,
+        dense: np.ndarray,
+        objective: str = "latency",
+        *,
+        max_blocks: int = 8,
+        fingerprint: str | None = None,
+    ) -> PartitionedResult:
+        """Partitioned run-time mode through the plan cache.
+
+        On a miss the tuner searches block counts {1, ..., max_blocks} and
+        the winning composite plan (or the monolithic fallback) is cached
+        per feature bucket; on a hit the stored per-block decisions replay
+        onto this matrix's own nnz-balanced boundaries. Kernels compile
+        through the process-wide memo, keyed per (matrix, row range)."""
+        from repro.partition.executor import compile_partitioned
+        from repro.partition.partitioner import SUPPORTED_BLOCK_COUNTS
+
+        self.stats.requests += 1
+        fp, feats, bucket = self._analyze(dense, fingerprint)
+        mode = _part_mode_key(max_blocks)
+        entry = self.cache.get(bucket, objective, mode)
+        plan = self._replay_partitioned(dense, entry) if entry is not None else None
+        cache_hit = plan is not None
+        if plan is None:
+            block_counts = tuple(
+                k for k in SUPPORTED_BLOCK_COUNTS if k <= max_blocks
+            ) or (1,)
+            plan = self.tuner.plan_partitioned(
+                dense, objective, block_counts=block_counts
+            )
+            self.stats.plans_computed += 1
+            self.stats.cache_misses += 1
+            self.cache.put(
+                CacheEntry(
+                    bucket=bucket,
+                    objective=objective,
+                    mode=mode,
+                    fmt="+".join(plan.formats),
+                    schedule=plan.blocks[0].schedule.as_dict(),
+                    predicted={
+                        "latency": plan.modeled.latency,
+                        "monolithic_latency": plan.monolithic.latency,
+                    },
+                    n_blocks=plan.n_blocks,
+                    blocks=[bp.as_dict() for bp in plan.blocks],
+                    monolithic_fmt=plan.monolithic_fmt,
+                )
+            )
+            log.info(
+                "partitioned miss: bucket=%s -> k=%d formats=%s (gain %.1f%%)",
+                bucket,
+                plan.n_blocks,
+                "+".join(plan.formats),
+                100.0 * plan.gain(),
+            )
+        else:
+            self.stats.cache_hits += 1
+        before = kernel_memo_stats()["compiles"]
+        kernel = compile_partitioned(
+            dense, plan, interpret=self.tuner.interpret, memo_key=fp
+        )
+        self.stats.kernel_compiles += kernel_memo_stats()["compiles"] - before
+        return PartitionedResult(
+            fingerprint=fp,
+            features=feats,
+            bucket=bucket,
+            objective=objective,
+            plan=plan,
+            kernel=kernel,
+            mode=mode,
+            cache_hit=cache_hit,
+        )
+
+    def serve_partitioned(
+        self,
+        dense: np.ndarray,
+        objective: str = "latency",
+        *,
+        max_blocks: int = 8,
+        fingerprint: str | None = None,
+    ) -> PartitionedResult:
+        """Partitioned serving with per-(block, format) bandit arms.
+
+        Each block's cell (``block_arm_bucket``) consults the adaptive
+        selector with the composite plan's block format as incumbent, so
+        individual blocks explore and drift independently — block 2 can be
+        re-routed to SELL while block 0 keeps its plan. An infeasible
+        exploratory pick is disabled for that block's cell and the planned
+        kernel serves instead (a probe failure is paid once, not per
+        request). Without an adaptive selector this is exactly
+        ``partitioned_optimize``."""
+        base = self.partitioned_optimize(
+            dense, objective, max_blocks=max_blocks, fingerprint=fingerprint
+        )
+        if self.adaptive is None:
+            return base
+        from dataclasses import replace as dc_replace
+
+        from repro.kernels.ops import compile_spmv_block
+        from repro.telemetry.adaptive import block_arm_bucket
+
+        served, exploratory, kernels = [], [], list(base.kernel.blocks)
+        for i, (bp, bk) in enumerate(zip(base.plan.blocks, base.kernel.blocks)):
+            cell = block_arm_bucket(base.bucket, bp.block.index, base.n_blocks)
+            prior = bp.modeled.latency if bp.modeled.latency > 0 else None
+            fmt, explore = self.adaptive.choose(
+                cell, objective, bp.fmt, format_names(), prior_value=prior
+            )
+            if fmt != bp.fmt:
+                try:
+                    before = kernel_memo_stats()["compiles"]
+                    swapped = compile_spmv_block(
+                        dense,
+                        bp.block.row_start,
+                        bp.block.row_end,
+                        fmt,
+                        bp.schedule,
+                        interpret=self.tuner.interpret,
+                        memo_key=base.fingerprint,
+                    )
+                    self.stats.kernel_compiles += (
+                        kernel_memo_stats()["compiles"] - before
+                    )
+                    kernels[i] = dc_replace(bk, fmt=fmt, kernel=swapped)
+                except Exception as exc:
+                    log.warning(
+                        "serve: %s infeasible for block %d of bucket %s (%s)",
+                        fmt,
+                        bp.block.index,
+                        base.bucket,
+                        exc,
+                    )
+                    self.adaptive.disable(cell, objective, fmt, fallback=bp.fmt)
+                    fmt, explore = bp.fmt, False
+            if explore:
+                self.stats.explorations += 1
+            served.append(fmt)
+            exploratory.append(explore)
+        from repro.partition.executor import PartitionedSpmv
+
+        kernel = PartitionedSpmv(kernels, base.plan.partition.n_rows)
+        return PartitionedResult(
+            fingerprint=base.fingerprint,
+            features=base.features,
+            bucket=base.bucket,
+            objective=base.objective,
+            plan=base.plan,
+            kernel=kernel,
+            mode=base.mode,
+            cache_hit=base.cache_hit,
+            served_formats=tuple(served),
+            exploratory=tuple(exploratory),
+        )
+
+    def observe_partitioned(
+        self, result: PartitionedResult, block_times_s: list[float]
+    ) -> None:
+        """Feed per-block measured wall times back: every (block, format)
+        pair is its own telemetry/bandit arm, and a sustained drift verdict
+        on ANY block evicts the composite plan for the bucket, so the next
+        request re-plans (and the promoted block arm seeds its incumbent)."""
+        if len(block_times_s) != result.n_blocks:
+            raise ValueError(
+                f"{len(block_times_s)} block times for {result.n_blocks} blocks"
+            )
+        self.stats.observations += 1
+        if self.telemetry is None and self.adaptive is None:
+            return
+        from repro.telemetry.adaptive import block_arm_bucket
+
+        formats = result.formats
+        for bp, fmt, dt in zip(result.plan.blocks, formats, block_times_s):
+            cell = block_arm_bucket(result.bucket, bp.block.index, result.n_blocks)
+            predicted = bp.modeled.latency if bp.modeled.latency > 0 else None
+            explored = bool(
+                result.exploratory[bp.block.index] if result.exploratory else False
+            )
+            if self.telemetry is not None:
+                self.telemetry.observe(
+                    bucket=cell,
+                    objective=result.objective,
+                    fmt=fmt,
+                    measured_s=dt,
+                    predicted_s=predicted if fmt == bp.fmt else None,
+                    plan_id=f"{cell}/{result.objective}/{result.mode}",
+                    exploratory=explored,
+                    schedule=bp.schedule.as_dict(),
+                    features=bp.block.features.dict(),
+                )
+            if self.adaptive is None:
+                continue
+            self.adaptive.update(
+                cell,
+                result.objective,
+                fmt,
+                dt,
+                predicted_s=predicted if fmt == bp.fmt else None,
+            )
+            challenger = self.adaptive.review(cell, result.objective)
+            if challenger is not None:
+                dropped = self.invalidate(result.bucket, result.objective, result.mode)
+                self.adaptive.promote(cell, result.objective, challenger)
+                log.info(
+                    "drift: block %d of bucket=%s obj=%s %s -> %s "
+                    "(%d composite plan(s) dropped)",
+                    bp.block.index,
+                    result.bucket,
+                    result.objective,
+                    fmt,
+                    challenger,
+                    dropped,
+                )
 
     # ----------------------------------------------------- telemetry serving
     def _incumbent_format(

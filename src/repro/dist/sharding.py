@@ -45,10 +45,36 @@ TRAIN_RULES: dict[str, str | None] = {
 # the decode path; the per-chip weight residency is paid once).
 INFER_RULES: dict[str, str | None] = dict(TRAIN_RULES, embed=None)
 
+# Partitioned SpMV (repro.partition.executor): the stacked per-block sparse
+# storage shards its leading "blocks" axis over the data axes (one row block
+# per device); the dense X vector replicates, because every block may gather
+# arbitrary columns; per-block Y keeps the "blocks" axis sharded so output
+# shards stay local to the device that produced them.
+SPMV_RULES: dict[str, str | None] = {
+    "blocks": "data",
+    "rows": None,
+    "cols": None,
+}
+
 RULE_SETS: dict[str, dict[str, str | None]] = {
     "train": TRAIN_RULES,
     "infer": INFER_RULES,
+    "spmv": SPMV_RULES,
 }
+
+
+def spmv_mesh(n_blocks: int | None = None):
+    """1-D ``("data",)`` mesh over the first ``n_blocks`` local devices.
+
+    The partitioned executor maps one row block per device, so the mesh
+    extent is ``min(n_blocks, available devices)`` — on a single-device host
+    this degrades to a 1-extent mesh and ``shard_map`` runs everything
+    locally (same program, no collectives)."""
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices) if n_blocks is None else max(1, min(n_blocks, len(devices)))
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))
 
 
 def abstract_mesh(axis_sizes: Iterable[int], axis_names: Iterable[str]) -> AbstractMesh:

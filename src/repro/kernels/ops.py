@@ -207,3 +207,26 @@ def compile_spmv(
             _KERNEL_MEMO.popitem(last=False)
             _MEMO_STATS["evictions"] += 1
     return prepared
+
+
+def compile_spmv_block(
+    dense: np.ndarray,
+    row_start: int,
+    row_end: int,
+    fmt: str,
+    schedule: KernelSchedule = DEFAULT_SCHEDULE,
+    *,
+    interpret: bool = True,
+    memo_key: Hashable | None = None,
+) -> PreparedSpmv:
+    """``compile_spmv`` for one row block of a larger matrix.
+
+    The memo identity composes the caller's whole-matrix key with the row
+    range, so a partitioned executor's per-block kernels are memoized (and
+    LRU-evicted, and format-evicted) exactly like whole-matrix kernels —
+    two composite plans over the same matrix share every block they agree
+    on, without colliding with the monolithic kernel for the same matrix.
+    """
+    block = np.asarray(dense)[row_start:row_end]
+    key = (memo_key, row_start, row_end) if memo_key is not None else None
+    return compile_spmv(block, fmt, schedule, interpret=interpret, memo_key=key)

@@ -17,6 +17,12 @@ aggregates per-(bucket, format) measurement arms; ``--telemetry-log`` makes
 the records a restart-surviving JSONL append-log; ``--adaptive`` layers the
 UCB bandit + drift detector on top (implies ``--telemetry``) so mispredicted
 cached plans are explored, detected, evicted, and relearned while serving.
+
+Partition flags (SpMV mode): ``--partition`` serves composite plans over
+nnz-balanced row blocks — each block independently routed through the
+format registry/predictors (``--max-blocks`` bounds the searched block
+counts); with ``--adaptive`` every (block, format) pair becomes its own
+bandit arm and drifted blocks are re-routed individually.
 """
 
 from __future__ import annotations
@@ -123,7 +129,18 @@ def serve_spmv(args) -> list[SpmvRequest]:
     )
     if len(session.cache):
         log.info("warm start: %d cached plans from %s", len(session.cache), args.spmv_cache)
-    server = SpmvServer(session, feedback=feedback)
+    server = SpmvServer(
+        session,
+        feedback=feedback,
+        partition=args.partition,
+        max_blocks=args.max_blocks,
+    )
+    if args.partition:
+        log.info(
+            "partitioned serving: composite plans up to %d nnz-balanced row "
+            "blocks per matrix (monolithic fallback when partitioning loses)",
+            args.max_blocks,
+        )
 
     # synthetic traffic: suite matrices with repeats (fleet-like resubmission)
     rng = np.random.default_rng(args.seed)
@@ -185,6 +202,13 @@ def main(argv=None):
     ap.add_argument("--format-plugins", default=None,
                     help="comma-separated modules registering extra sparse "
                          "formats (e.g. repro.sparse.bcsr)")
+    ap.add_argument("--partition", action="store_true",
+                    help="partitioned SpMV serving: per-matrix composite "
+                         "plans over nnz-balanced row blocks, each block "
+                         "with its own format/schedule")
+    ap.add_argument("--max-blocks", type=int, default=8,
+                    help="block-count budget for --partition (searched over "
+                         "{1, 2, 4, 8} up to this bound; 1 = monolithic)")
     ap.add_argument("--telemetry", action="store_true",
                     help="measure every served kernel and aggregate per-arm stats")
     ap.add_argument("--telemetry-log", default=None,

@@ -141,6 +141,23 @@ def _gen_geometric(n: int, avg: float, rng) -> np.ndarray:
     return _scatter(n, n, rows, cols, rng)
 
 
+def _gen_denseband(n: int, avg: float, rng) -> np.ndarray:
+    # contiguous fully-dense diagonal band of width ~avg: every row has
+    # exactly the same count and its nonzeros are consecutive columns. The
+    # most ELL/BELL-friendly structure a matrix can have (uniform width,
+    # dense tiles) — the "dense band" half of the partitioned-SpMV
+    # heterogeneity studies.
+    w = int(np.clip(int(avg), 1, n))
+    starts = np.clip(np.arange(n) - w // 2, 0, n - w)
+    # group starts so 8-row sublane slabs share a column offset (tile-dense)
+    starts = (starts // 8) * 8
+    rows = np.repeat(np.arange(n), w)
+    cols = (starts[:, None] + np.arange(w)[None, :]).reshape(-1)
+    dense = np.zeros((n, n), dtype=np.float32)
+    dense[rows, cols] = rng.uniform(0.1, 1.0, size=rows.size).astype(np.float32)
+    return dense
+
+
 def _gen_denserows(n: int, avg: float, rng) -> np.ndarray:
     counts = np.clip(rng.normal(avg, avg * 0.3, size=n).astype(np.int64), 1, n - 1)
     rows = _row_major_expand(counts)
@@ -164,6 +181,7 @@ _PATTERNS = {
     "powerlaw": _gen_powerlaw,
     "block": _gen_block,
     "geometric": _gen_geometric,
+    "denseband": _gen_denseband,
     "denserows": _gen_denserows,
     "bipartite": _gen_bipartite,
 }

@@ -24,6 +24,7 @@ from repro.telemetry.adaptive import (
     AdaptiveFormatSelector,
     ArmState,
     CellState,
+    block_arm_bucket,
 )
 from repro.telemetry.feedback import (
     FeedbackConfig,
@@ -46,5 +47,6 @@ __all__ = [
     "FeedbackLoop",
     "MeasurementRecord",
     "TelemetryRecorder",
+    "block_arm_bucket",
     "telemetry_records",
 ]

@@ -40,6 +40,20 @@ log = get_logger("telemetry.adaptive")
 CellKey = tuple[str, str]  # (bucket, objective)
 
 
+def block_arm_bucket(bucket: str, index: int, n_blocks: int) -> str:
+    """Bandit cell key for one row block of a partitioned plan.
+
+    Partitioned serving (repro.partition + ``AutoSpmvSession``'s
+    ``serve_partitioned``/``observe_partitioned``) scopes every bandit cell
+    to a block, so each (block, format) pair is its own arm: block 2 of a
+    heterogeneous matrix can drift to SELL while block 0 keeps BELL, and a
+    sustained-drift eviction re-plans the composite without touching the
+    monolithic cells for the same feature bucket. ``n_blocks`` is part of
+    the key — a 4-way and an 8-way split of the same bucket measure
+    different row populations and must not share statistics."""
+    return f"{bucket}#blk{index}of{n_blocks}"
+
+
 @dataclass
 class AdaptiveConfig:
     exploration_bonus: float = 0.5  # UCB width, in units of the best arm's mean

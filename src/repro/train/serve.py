@@ -167,6 +167,8 @@ class SpmvServer:
         *,
         adaptive: bool | None = None,
         feedback=None,  # optional repro.telemetry.FeedbackLoop
+        partition: bool = False,
+        max_blocks: int = 8,
     ):
         self.session = session
         # default: take the observed path whenever the session can consume
@@ -177,6 +179,8 @@ class SpmvServer:
             else (session.telemetry is not None or session.adaptive is not None)
         )
         self.feedback = feedback
+        self.partition = partition
+        self.max_blocks = max_blocks
         self.batches_served = 0
         self.requests_served = 0
 
@@ -203,11 +207,47 @@ class SpmvServer:
             if refit:
                 log.info("telemetry refit after batch: %s", refit)
 
+    def _run_partitioned(self, objective: str, group: list[SpmvRequest]) -> None:
+        """Per-request partitioned serve. On the observed path (telemetry
+        and/or bandit consuming measurements) blocks are timed individually
+        so each (block, format) arm learns its own wall time; otherwise the
+        composite kernel runs as one call — no per-block host sync is paid
+        for measurements nothing would consume."""
+        for req in group:
+            x = jnp.asarray(req.x)
+            if self.adaptive:
+                res = self.session.serve_partitioned(
+                    req.dense, objective, max_blocks=self.max_blocks
+                )
+                y, block_times = res.kernel.timed_call(x)
+                dt = sum(block_times)
+                self.session.observe_partitioned(res, block_times)
+            else:
+                res = self.session.partitioned_optimize(
+                    req.dense, objective, max_blocks=self.max_blocks
+                )
+                t0 = time.perf_counter()
+                y = np.asarray(res.kernel(x))
+                dt = time.perf_counter() - t0
+            req.y = y
+            req.schedule = res.plan.blocks[0].schedule
+            req.fmt = "+".join(res.formats)
+            req.cache_hit = res.cache_hit
+            req.exploratory = any(res.exploratory)
+            req.latency_s = dt
+        if self.feedback is not None:
+            refit = self.feedback.maybe_refit(self.session.tuner.predictor)
+            if refit:
+                log.info("telemetry refit after batch: %s", refit)
+
     def run(self, requests: list[SpmvRequest]) -> list[SpmvRequest]:
         by_objective: dict[str, list[SpmvRequest]] = {}
         for r in requests:
             by_objective.setdefault(r.objective, []).append(r)
         for objective, group in by_objective.items():
+            if self.partition:
+                self._run_partitioned(objective, group)
+                continue
             if self.adaptive:
                 self._run_observed(objective, group)
                 continue

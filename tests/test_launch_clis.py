@@ -67,3 +67,24 @@ def test_serve_cli_spmv_adaptive_telemetry(tmp_path):
     assert (tmp_path / "tuning.json").exists()
     log_lines = (tmp_path / "telemetry.jsonl").read_text().splitlines()
     assert len(log_lines) == 6
+
+
+def test_serve_cli_spmv_partitioned(tmp_path):
+    """SpMV serving with composite partitioned plans: outputs stay correct
+    and the per-request format reports the per-block routing."""
+    done = serve_main([
+        "--spmv",
+        "--requests", "4",
+        "--spmv-train-matrices", "2",
+        "--spmv-scale", "0.001",
+        "--spmv-cache", str(tmp_path / "tuning.json"),
+        "--partition",
+        "--max-blocks", "4",
+    ])
+    assert len(done) == 4
+    for r in done:
+        ref = r.dense @ r.x
+        err = np.abs(r.y - ref).max() / (np.abs(ref).max() + 1e-9)
+        assert err < 0.05  # bfloat16 schedules allowed; must still be SpMV
+        assert r.fmt and r.latency_s > 0  # "fmtA+fmtB..." composite report
+    assert (tmp_path / "tuning.json").exists()
