@@ -8,6 +8,16 @@ homogeneous matrix must fall back to block count 1. Reports the modeled
 margin, the measured (interpret-mode wall time) margin, per-block routing,
 and a multi-device ``shard_map`` correctness pass on however many devices
 the host exposes.
+
+Two PR6 studies ride along:
+
+- fused single-launch executor: the same composite plan lowered into ONE
+  Pallas launch (merge-path work descriptor) must measure no slower than
+  the sequential per-block dispatch AND the best monolithic kernel — the
+  per-launch fixed cost it removes is real, not modeled.
+- calibration: per-block (predicted, measured) pairs from ``timed_call``
+  feed ``CalibratedCostModel.fit``; its mean relative error against the
+  same measurements must be at most half the uncalibrated model's.
 """
 
 from __future__ import annotations
@@ -17,9 +27,16 @@ import time
 import numpy as np
 
 from benchmarks.common import print_table, save_result
+from repro.core.objectives import CalibratedCostModel
 from repro.core.session import build_tuner
 from repro.kernels.ops import compile_spmv
-from repro.partition import compile_partitioned, partition_rows, shard_partitioned
+from repro.partition import (
+    compile_fused_partitioned,
+    compile_partitioned,
+    partition_rows,
+    shard_partitioned,
+)
+from repro.telemetry import TelemetryRecorder
 from repro.sparse.generate import MATRIX_NAMES, random_matrix
 
 SCALES = {
@@ -95,6 +112,62 @@ def run(scale: str = "ci") -> dict:
         rel_err_monolithic=err_mono,
     )
 
+    # --- fused single-launch executor vs sequential dispatch --------------
+    fused_kernel = compile_fused_partitioned(het, plan)
+    t_fused, y_fused = _measure(fused_kernel, x, reps)
+    err_fused = float(np.abs(y_fused - ref).max() / norm)
+    assert err_fused < 2e-2, f"fused output diverged: {err_fused}"
+    out["hetero"].update(
+        measured_fused_s=t_fused,
+        rel_err_fused=err_fused,
+        fused_n_tiles=fused_kernel.n_tiles,
+        fused_tile=fused_kernel.kernel.tile,
+    )
+    assert t_fused <= t_part, (
+        f"fused single launch ({t_fused*1e3:.2f} ms) slower than sequential "
+        f"per-block dispatch ({t_part*1e3:.2f} ms)"
+    )
+    assert t_fused <= t_mono, (
+        f"fused single launch ({t_fused*1e3:.2f} ms) slower than the best "
+        f"monolithic kernel ({t_mono*1e3:.2f} ms)"
+    )
+
+    # --- calibration: measured block times halve the model's error --------
+    recorder = TelemetryRecorder()
+    for _ in range(max(reps, 3)):
+        _, block_times = part_kernel.timed_call(x)
+        for bp, t in zip(plan.blocks, block_times):
+            recorder.observe(
+                bucket=f"blk{bp.block.index}",
+                objective="latency",
+                fmt=bp.fmt,
+                measured_s=t,
+                predicted_s=max(bp.modeled.latency, 1e-9),
+            )
+    cal = CalibratedCostModel.fit_from_telemetry(recorder)
+    errs_raw, errs_cal = [], []
+    for fmt, pairs in recorder.calibration_samples().items():
+        c = cal.corrections.get(fmt)
+        for pred, meas in pairs:
+            errs_raw.append(abs(pred - meas) / meas)
+            fitted = c.launch_overhead_s + c.latency_scale * pred if c else pred
+            errs_cal.append(abs(fitted - meas) / meas)
+    mre_raw = float(np.mean(errs_raw))
+    mre_cal = float(np.mean(errs_cal))
+    # a calibrated re-plan now charges the measured per-launch fixed cost
+    plan_cal = tuner.plan_partitioned(het, "latency", cost_model=cal)
+    out["calibration"] = {
+        "samples": sum(len(p) for p in recorder.calibration_samples().values()),
+        "formats_fitted": len(cal.corrections),
+        "mre_uncalibrated": mre_raw,
+        "mre_calibrated": mre_cal,
+        "calibrated_n_blocks": plan_cal.n_blocks,
+    }
+    assert mre_cal <= mre_raw / 2, (
+        f"calibration did not halve the model error: "
+        f"{mre_cal:.3f} vs raw {mre_raw:.3f}"
+    )
+
     # --- homogeneous: must fall back to the monolithic plan ---------------
     homo = random_matrix(n, 12.0, "powerlaw", seed=5).astype(np.float32)
     plan_h = tuner.plan_partitioned(homo, "latency")
@@ -133,9 +206,14 @@ def run(scale: str = "ci") -> dict:
         ],
     )
     print(
-        f"hetero: measured {t_part*1e3:.2f} ms partitioned vs "
-        f"{t_mono*1e3:.2f} ms monolithic (interpret mode); "
-        f"sharded over {n_dev} device(s), rel err {err_sh:.2e}"
+        f"hetero: measured {t_fused*1e3:.2f} ms fused vs {t_part*1e3:.2f} ms "
+        f"sequential partitioned vs {t_mono*1e3:.2f} ms monolithic (interpret "
+        f"mode); sharded over {n_dev} device(s), rel err {err_sh:.2e}"
+    )
+    print(
+        f"calibration: {out['calibration']['samples']} per-block samples, "
+        f"mean rel err {mre_raw:.2f} uncalibrated -> {mre_cal:.2f} calibrated; "
+        f"calibrated planner picks k={plan_cal.n_blocks}"
     )
     save_result("bench_partition", out)
     return out

@@ -5,7 +5,7 @@ report. ``python -m benchmarks.run [--scale ci|paper] [--only fig9,table5]``.
 (the session-cache, adaptive-telemetry, partition, and format-sweep ones,
 which skip dataset-wide predictor sweeps) at the smallest scale.
 
-Every run also writes a machine-readable ``BENCH_PR5.json`` next to the
+Every run also writes a machine-readable ``BENCH_PR6.json`` next to the
 other artifacts (``artifacts/bench/`` by default): one record per executed
 benchmark with its name, scale, duration, and the numeric metrics flattened
 out of the payload its ``run()`` returned. CI runs the smoke tier and
@@ -41,7 +41,7 @@ BENCHES = [
 
 SMOKE_BENCHES = ("session_cache", "adaptive", "partition", "formats")
 
-RESULTS_FILE = "BENCH_PR5.json"
+RESULTS_FILE = "BENCH_PR6.json"
 _MAX_METRICS = 400  # per bench: keep the artifact readable, not exhaustive
 
 

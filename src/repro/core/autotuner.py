@@ -159,6 +159,7 @@ class AutoSpMV:
         objective: str = "latency",
         *,
         block_counts: tuple[int, ...] | None = None,
+        cost_model=None,
     ):
         """Partitioned run-time mode: split the matrix into nnz-balanced row
         blocks, run the format/schedule predictors per block, and search
@@ -178,7 +179,8 @@ class AutoSpMV:
             tuple(block_counts) if block_counts is not None else SUPPORTED_BLOCK_COUNTS
         )
         return plan_partitioned(
-            self.predictor, dense, objective, block_counts=counts
+            self.predictor, dense, objective, block_counts=counts,
+            cost_model=cost_model,
         )
 
     # ------------------------------------------------------------ compile time

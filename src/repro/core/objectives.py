@@ -26,8 +26,10 @@ studies but does not enter the four paper objectives.
 
 from __future__ import annotations
 
+import json
 import math
 from dataclasses import dataclass
+from pathlib import Path
 
 import numpy as np
 
@@ -204,6 +206,156 @@ class TpuCostModel:
         power = min(energy / latency, hw.p_max - hw.p_static)
         mflops = fp.useful_flops / latency / 1e6
         return ObjectiveValues(latency, energy, power, mflops / power)
+
+
+# ---------------------------------------------------------------------------
+# measurement-calibrated cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FormatCalibration:
+    """Per-format affine correction: measured ≈ overhead + scale * modeled.
+
+    The intercept is a real per-launch fixed cost (trace/dispatch/DMA setup —
+    the term the analytical model omits and the reason it scores k launches
+    as free); the slope absorbs systematic bytes/s / nnz/s misestimates.
+    ``mean_rel_err`` is a fit diagnostic on the samples used, not a bound.
+    """
+
+    launch_overhead_s: float = 0.0
+    latency_scale: float = 1.0
+    samples: int = 0
+    mean_rel_err: float = math.nan
+
+    def as_dict(self) -> dict:
+        return {
+            "launch_overhead_s": self.launch_overhead_s,
+            "latency_scale": self.latency_scale,
+            "samples": self.samples,
+            "mean_rel_err": self.mean_rel_err,
+        }
+
+
+class CalibratedCostModel(TpuCostModel):
+    """``TpuCostModel`` with per-format affine corrections fit to telemetry.
+
+    The analytical model's *orderings* drive the tuner, but the partition
+    planner also needs absolute scale: choosing between 1 launch and k
+    launches compares sums of latencies, so a missing per-launch fixed cost
+    systematically favours more blocks (PR 5's modeled-vs-measured gap).
+    Corrections are fit per format from (predicted, measured) latency pairs
+    accumulated by the telemetry recorder, and applied inside ``evaluate`` —
+    ``partition.plan.combine`` then charges k corrected launches against one
+    corrected monolithic launch with no planner changes.
+
+    With no corrections (or none for the requested format) evaluation is
+    byte-identical to the base model, so the class is safe as a drop-in
+    default. Energy stays modeled: wall-clock telemetry carries no power
+    sensor, and rescaling energy by measured time would double-count the
+    overhead in the power term.
+    """
+
+    def __init__(
+        self,
+        hw: HardwareProfile = TPU_V5E,
+        corrections: dict[str, FormatCalibration] | None = None,
+    ):
+        super().__init__(hw)
+        self.corrections = dict(corrections or {})
+
+    def evaluate(
+        self, stats: MatrixStats, fmt: str, schedule: KernelSchedule
+    ) -> ObjectiveValues:
+        base = super().evaluate(stats, fmt, schedule)
+        cal = self.corrections.get(fmt)
+        if cal is None or cal.samples <= 0 or not base.feasible:
+            return base
+        latency = cal.launch_overhead_s + cal.latency_scale * base.latency
+        if latency <= 0.0 or not math.isfinite(latency):
+            return base
+        # energy is unchanged; power/efficiency re-derive from the corrected
+        # wall time so the four objectives stay mutually consistent
+        useful_flops = base.efficiency * base.power * base.latency * 1e6
+        power = min(base.energy / latency, self.hw.p_max - self.hw.p_static)
+        mflops = useful_flops / latency / 1e6
+        return ObjectiveValues(latency, base.energy, power, mflops / power)
+
+    # ------------------------------------------------------------------ fit
+    @staticmethod
+    def _fit_one(pairs: list[tuple[float, float]]) -> FormatCalibration | None:
+        pts = [(p, m) for p, m in pairs if p > 0.0 and m > 0.0]
+        if not pts:
+            return None
+        pred = np.asarray([p for p, _ in pts], dtype=np.float64)
+        meas = np.asarray([m for _, m in pts], dtype=np.float64)
+        if len(pts) >= 2 and float(np.ptp(pred)) > 0.0:
+            scale, overhead = np.polyfit(pred, meas, 1)
+        else:
+            scale, overhead = float(meas.mean() / pred.mean()), 0.0
+        if scale <= 0.0 or overhead < 0.0:
+            # a negative intercept (or inverted slope) means the affine form
+            # extrapolates below zero for small kernels; fall back to the
+            # always-safe pure rescale
+            scale, overhead = float(meas.mean() / pred.mean()), 0.0
+        fitted = overhead + scale * pred
+        rel_err = float(np.mean(np.abs(fitted - meas) / meas))
+        return FormatCalibration(
+            launch_overhead_s=float(overhead),
+            latency_scale=float(scale),
+            samples=len(pts),
+            mean_rel_err=rel_err,
+        )
+
+    @classmethod
+    def fit(
+        cls,
+        samples: dict[str, list[tuple[float, float]]],
+        hw: HardwareProfile = TPU_V5E,
+    ) -> "CalibratedCostModel":
+        """Fit per-format corrections from (predicted_s, measured_s) pairs."""
+        corrections = {}
+        for fmt, pairs in samples.items():
+            cal = cls._fit_one(list(pairs))
+            if cal is not None:
+                corrections[fmt] = cal
+        return cls(hw, corrections)
+
+    @classmethod
+    def fit_from_telemetry(
+        cls, recorder, hw: HardwareProfile = TPU_V5E
+    ) -> "CalibratedCostModel":
+        """Fit from a ``TelemetryRecorder``'s accumulated calibration pairs."""
+        return cls.fit(recorder.calibration_samples(), hw)
+
+    # -------------------------------------------------------------- persist
+    def save(self, path) -> None:
+        """Persist alongside the tuning cache (atomic, like the cache)."""
+        from repro.utils.io import atomic_write_text
+
+        payload = {
+            "version": 1,
+            "hardware": self.hw.name,
+            "formats": {f: c.as_dict() for f, c in self.corrections.items()},
+        }
+        atomic_write_text(path, json.dumps(payload, indent=2, sort_keys=True))
+
+    @classmethod
+    def load(cls, path, hw: HardwareProfile | None = None) -> "CalibratedCostModel":
+        raw = json.loads(Path(path).read_text())
+        if raw.get("version") != 1:
+            raise ValueError(f"unsupported calibration version: {raw.get('version')!r}")
+        resolved = hw or HARDWARE.get(raw.get("hardware", ""), TPU_V5E)
+        corrections = {
+            fmt: FormatCalibration(
+                launch_overhead_s=float(d["launch_overhead_s"]),
+                latency_scale=float(d["latency_scale"]),
+                samples=int(d["samples"]),
+                mean_rel_err=float(d.get("mean_rel_err", math.nan)),
+            )
+            for fmt, d in raw.get("formats", {}).items()
+        }
+        return cls(resolved, corrections)
 
 
 # ---------------------------------------------------------------------------

@@ -108,6 +108,12 @@ def _part_mode_key(max_blocks: int) -> str:
     return f"part:max{max_blocks}"
 
 
+def _calibration_path(cache_path: Path) -> Path:
+    """Where a session persists its fitted cost-model corrections: a sibling
+    of the tuning cache, so the two artifacts travel (and restart) together."""
+    return cache_path.with_name(cache_path.stem + ".calibration.json")
+
+
 @dataclass(frozen=True)
 class PartitionedResult:
     """What ``partitioned_optimize`` returns: the composite plan actually
@@ -186,6 +192,7 @@ class AutoSpmvSession:
         *,
         telemetry=None,
         adaptive=None,
+        cost_model=None,
     ):
         if cache is None:
             if cache_path is not None and Path(cache_path).exists():
@@ -205,6 +212,23 @@ class AutoSpmvSession:
         self.cache_path = Path(cache_path) if cache_path is not None else None
         self.telemetry = telemetry
         self.adaptive = adaptive
+        if cost_model is None and self.cache_path is not None:
+            cal_path = _calibration_path(self.cache_path)
+            if cal_path.exists():
+                try:
+                    from repro.core.objectives import CalibratedCostModel
+
+                    cost_model = CalibratedCostModel.load(cal_path)
+                    log.info(
+                        "loaded cost-model calibration from %s (%d formats)",
+                        cal_path,
+                        len(cost_model.corrections),
+                    )
+                except Exception as exc:  # advisory artifact: cold-start fine
+                    log.warning(
+                        "ignoring unreadable calibration %s (%s)", cal_path, exc
+                    )
+        self.cost_model = cost_model
         self.stats = SessionStats()
         # fingerprint -> (features, bucket): dedups the f term. LRU-bounded
         # like the kernel memo — a server streaming distinct matrices must
@@ -459,6 +483,7 @@ class AutoSpmvSession:
         objective: str = "latency",
         *,
         max_blocks: int = 8,
+        fused: bool = False,
         fingerprint: str | None = None,
     ) -> PartitionedResult:
         """Partitioned run-time mode through the plan cache.
@@ -467,8 +492,18 @@ class AutoSpmvSession:
         the winning composite plan (or the monolithic fallback) is cached
         per feature bucket; on a hit the stored per-block decisions replay
         onto this matrix's own nnz-balanced boundaries. Kernels compile
-        through the process-wide memo, keyed per (matrix, row range)."""
-        from repro.partition.executor import compile_partitioned
+        through the process-wide memo, keyed per (matrix, row range).
+
+        Planning uses the session's ``cost_model`` when one is set (a
+        ``CalibratedCostModel`` after ``calibrate``), so block-count search
+        charges the measured per-launch fixed cost. With ``fused=True`` the
+        composite lowers to ONE Pallas launch (``compile_fused_partitioned``,
+        one memo entry keyed on the whole plan) instead of per-block kernels
+        — the fast serving path; per-block timing needs ``fused=False``."""
+        from repro.partition.executor import (
+            compile_fused_partitioned,
+            compile_partitioned,
+        )
         from repro.partition.partitioner import SUPPORTED_BLOCK_COUNTS
 
         self.stats.requests += 1
@@ -482,7 +517,8 @@ class AutoSpmvSession:
                 k for k in SUPPORTED_BLOCK_COUNTS if k <= max_blocks
             ) or (1,)
             plan = self.tuner.plan_partitioned(
-                dense, objective, block_counts=block_counts
+                dense, objective, block_counts=block_counts,
+                cost_model=self.cost_model,
             )
             self.stats.plans_computed += 1
             self.stats.cache_misses += 1
@@ -512,9 +548,14 @@ class AutoSpmvSession:
         else:
             self.stats.cache_hits += 1
         before = kernel_memo_stats()["compiles"]
-        kernel = compile_partitioned(
-            dense, plan, interpret=self.tuner.interpret, memo_key=fp
-        )
+        if fused:
+            kernel = compile_fused_partitioned(
+                dense, plan, interpret=self.tuner.interpret, memo_key=fp
+            )
+        else:
+            kernel = compile_partitioned(
+                dense, plan, interpret=self.tuner.interpret, memo_key=fp
+            )
         self.stats.kernel_compiles += kernel_memo_stats()["compiles"] - before
         return PartitionedResult(
             fingerprint=fp,
@@ -847,6 +888,42 @@ class AutoSpmvSession:
         ]:
             del self._pred_memo[key]
         return dropped
+
+    # ----------------------------------------------------------- calibration
+    def calibrate(self, *, save: bool = True, min_samples: int = 1):
+        """Fit a ``CalibratedCostModel`` from accumulated telemetry.
+
+        The recorder's (predicted_s, measured_s) pairs become per-format
+        affine corrections; the fitted model replaces the session's
+        ``cost_model`` so subsequent partition planning charges the measured
+        per-launch cost. Cached partitioned plans were scored by the old
+        model and are evicted (any ``part:*`` mode, every bucket) — the next
+        request re-plans against measured reality. Persisted as a sibling of
+        the tuning cache so a restarted session auto-loads it.
+        """
+        if self.telemetry is None:
+            raise ValueError("calibrate() requires a telemetry recorder")
+        from repro.core.objectives import TPU_V5E, CalibratedCostModel
+
+        hw = getattr(self.cost_model, "hw", None) or TPU_V5E
+        model = CalibratedCostModel.fit_from_telemetry(self.telemetry, hw)
+        model.corrections = {
+            f: c for f, c in model.corrections.items() if c.samples >= min_samples
+        }
+        self.cost_model = model
+        dropped = 0
+        for entry in list(self.cache.entries()):
+            if entry.mode.startswith("part:"):
+                dropped += self.invalidate(entry.bucket, entry.objective, entry.mode)
+        if save and self.cache_path is not None:
+            model.save(_calibration_path(self.cache_path))
+        log.info(
+            "calibrated cost model: %d format(s), %d stale partitioned plan(s) "
+            "dropped",
+            len(model.corrections),
+            dropped,
+        )
+        return model
 
     # ----------------------------------------------------------- persistence
     def save(self, path: str | Path | None = None) -> Path:

@@ -113,8 +113,10 @@ def matrix_fingerprint(dense: np.ndarray) -> str:
 # schedule, interpret). Opt-in via ``compile_spmv(..., memo_key=...)`` so
 # one-off callers don't pin large format storage. Bounded: each entry holds
 # the full converted matrix storage, so an unbounded memo on a serving path
-# streaming distinct matrices would grow RSS until OOM.
-_KERNEL_MEMO: "OrderedDict[tuple, PreparedSpmv]" = OrderedDict()
+# streaming distinct matrices would grow RSS until OOM. Fused composite
+# kernels share the memo with a "fused:<fmt>+<fmt>..." format tag and the
+# composite-plan signature in the schedule slot (one entry per plan).
+_KERNEL_MEMO: "OrderedDict[tuple, object]" = OrderedDict()
 _MEMO_STATS = {"hits": 0, "compiles": 0, "evictions": 0}
 _MEMO_LIMIT = 256
 
@@ -161,14 +163,27 @@ def clear_kernel_memo() -> None:
     _KERNEL_MEMO.clear()
 
 
+def _fused_tag_contains(tag, fmt: str) -> bool:
+    """Whether a fused memo tag ("fused:ell+csr+...") involves ``fmt``."""
+    return (
+        isinstance(tag, str)
+        and tag.startswith(_FUSED_TAG_PREFIX)
+        and fmt in tag[len(_FUSED_TAG_PREFIX) :].split("+")
+    )
+
+
 def evict_kernel_memo_format(fmt: str) -> int:
     """Drop every memoized kernel of one format.
 
     Called by the registry when a format is unregistered or re-registered:
     a memoized ``PreparedSpmv`` must not outlive the ``FormatSpec`` that
     built it (its container would no longer resolve in ``spec_for``, or
-    would silently run the old implementation)."""
-    stale = [k for k in _KERNEL_MEMO if k[1] == fmt]
+    would silently run the old implementation). Fused composite kernels are
+    evicted when ANY of their block formats matches — their flattened
+    streams were lowered through the retiring ``FormatSpec``."""
+    stale = [
+        k for k in _KERNEL_MEMO if k[1] == fmt or _fused_tag_contains(k[1], fmt)
+    ]
     for k in stale:
         del _KERNEL_MEMO[k]
         _MEMO_STATS["evictions"] += 1
@@ -230,3 +245,52 @@ def compile_spmv_block(
     block = np.asarray(dense)[row_start:row_end]
     key = (memo_key, row_start, row_end) if memo_key is not None else None
     return compile_spmv(block, fmt, schedule, interpret=interpret, memo_key=key)
+
+
+_FUSED_TAG_PREFIX = "fused:"
+
+
+def fused_plan_signature(plan) -> tuple:
+    """Hashable identity of a ``CompositePlan``'s executable content.
+
+    Two plans lower to the same fused stream iff their (row range, format,
+    schedule) tuples agree per block — the memo key component that makes
+    "one kernel memo entry keyed on the composite plan" precise."""
+    return tuple(
+        (bp.block.row_start, bp.block.row_end, bp.fmt, bp.schedule)
+        for bp in plan.blocks
+    )
+
+
+def compile_spmv_fused(
+    dense: np.ndarray,
+    plan,
+    *,
+    interpret: bool = True,
+    memo_key: Hashable | None = None,
+):
+    """Lower a ``CompositePlan`` to its single-launch fused kernel.
+
+    The whole composite memoizes as ONE entry: the format slot carries a
+    ``fused:<fmt>+<fmt>...`` tag (so ``evict_kernel_memo_format`` retires it
+    with any constituent format) and the schedule slot carries the plan
+    signature. Returns a ``repro.kernels.fused.FusedSpmv``."""
+    from repro.kernels.fused import lower_fused
+
+    key = None
+    if memo_key is not None:
+        tag = _FUSED_TAG_PREFIX + "+".join(bp.fmt for bp in plan.blocks)
+        key = (memo_key, tag, fused_plan_signature(plan), interpret)
+        hit = _KERNEL_MEMO.get(key)
+        if hit is not None:
+            _MEMO_STATS["hits"] += 1
+            _KERNEL_MEMO.move_to_end(key)
+            return hit
+    kernel = lower_fused(dense, plan, interpret=interpret)
+    if key is not None:
+        _MEMO_STATS["compiles"] += 1
+        _KERNEL_MEMO[key] = kernel
+        while len(_KERNEL_MEMO) > _MEMO_LIMIT:
+            _KERNEL_MEMO.popitem(last=False)
+            _MEMO_STATS["evictions"] += 1
+    return kernel

@@ -94,7 +94,13 @@ def serve_spmv(args) -> list[SpmvRequest]:
     log.info("tuner ready in %.1fs", time.time() - t0)
 
     telemetry = adaptive = feedback = None
-    if args.telemetry or args.adaptive or args.telemetry_log or args.refit_every > 0:
+    if (
+        args.telemetry
+        or args.adaptive
+        or args.telemetry_log
+        or args.refit_every > 0
+        or args.calibrate_every > 0
+    ):
         from repro.telemetry import (
             AdaptiveFormatSelector,
             FeedbackConfig,
@@ -134,12 +140,15 @@ def serve_spmv(args) -> list[SpmvRequest]:
         feedback=feedback,
         partition=args.partition,
         max_blocks=args.max_blocks,
+        fused=args.fused,
+        calibrate_every=args.calibrate_every,
     )
     if args.partition:
         log.info(
             "partitioned serving: composite plans up to %d nnz-balanced row "
-            "blocks per matrix (monolithic fallback when partitioning loses)",
+            "blocks per matrix (monolithic fallback when partitioning loses)%s",
             args.max_blocks,
+            ", fused single-launch executor" if args.fused else "",
         )
 
     # synthetic traffic: suite matrices with repeats (fleet-like resubmission)
@@ -209,6 +218,15 @@ def main(argv=None):
     ap.add_argument("--max-blocks", type=int, default=8,
                     help="block-count budget for --partition (searched over "
                          "{1, 2, 4, 8} up to this bound; 1 = monolithic)")
+    ap.add_argument("--fused", action="store_true",
+                    help="with --partition: run the composite plan as ONE "
+                         "Pallas launch (merge-path work descriptor) instead "
+                         "of per-block kernels; disables per-block bandit "
+                         "timing")
+    ap.add_argument("--calibrate-every", type=int, default=0,
+                    help="refit the CalibratedCostModel from telemetry every "
+                         "N served requests (0=off; needs --telemetry); the "
+                         "fit persists next to --spmv-cache")
     ap.add_argument("--telemetry", action="store_true",
                     help="measure every served kernel and aggregate per-arm stats")
     ap.add_argument("--telemetry-log", default=None,

@@ -235,6 +235,12 @@ def plan_partitioned(
     matrix's predicted schedule) always competes; a partitioned candidate
     replaces it only when its combined modeled objective wins by at least
     ``min_gain``, so homogeneous matrices keep block count 1.
+
+    With a ``CalibratedCostModel`` the comparison also reflects the measured
+    per-launch fixed cost: ``combine`` sums per-block latencies, so a k-block
+    candidate is charged k calibrated launch overheads against the
+    monolithic plan's one — exactly the term whose absence made the
+    uncalibrated planner over-partition.
     """
     cm = cost_model or TpuCostModel()
     dense = np.asarray(dense)
@@ -305,12 +311,13 @@ def plan_partitioned(
         )
     log.info(
         "partitioned plan: obj=%s searched=%s -> k=%d formats=%s gain=%.1f%% "
-        "(monolithic %s)",
+        "(monolithic %s, %s cost model)",
         objective,
         block_counts,
         chosen.n_blocks,
         "+".join(chosen.formats),
         100.0 * chosen.gain(),
         monolithic_fmt,
+        "calibrated" if getattr(cm, "corrections", None) else "analytical",
     )
     return chosen

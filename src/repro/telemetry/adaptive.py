@@ -96,6 +96,11 @@ class CellState:
     total_pulls: int = 0
     exploration_pulls: int = 0
     drift_strikes: int = 0
+    model_drift_strikes: int = 0  # measured > modeled subset of the strikes:
+    # high while arm-regret strikes stay low means the cost-model *scale* is
+    # off, not the plan — the signal that it is time to recalibrate
+    # (``CalibratedCostModel`` puts predicted_s on the measured scale, which
+    # collapses these without touching real plan regressions)
     promoted: bool = False  # incumbent came from measurement, not the model
     invalidations: int = 0
 
@@ -247,9 +252,13 @@ class AdaptiveFormatSelector:
             return
         # drift detection runs on incumbent observations only
         cfg = self.config
-        drifted = False
-        if predicted_s is not None and predicted_s > 0:
-            drifted |= measured_s > predicted_s * (1.0 + cfg.drift_threshold)
+        model_drift = (
+            predicted_s is not None
+            and predicted_s > 0
+            and measured_s > predicted_s * (1.0 + cfg.drift_threshold)
+        )
+        cell.model_drift_strikes = cell.model_drift_strikes + 1 if model_drift else 0
+        drifted = model_drift
         inc_ewma = arm.stats.ewma if arm.stats.ewma is not None else arm.stats.mean
         for other_fmt, other in cell.arms.items():
             if other_fmt == fmt or other.pulls < cfg.min_challenger_pulls:
@@ -339,4 +348,7 @@ class AdaptiveFormatSelector:
             ),
             "promotions": sum(c.invalidations for c in self._cells.values()),
             "promoted_cells": sum(1 for c in self._cells.values() if c.promoted),
+            "model_drift_strikes": sum(
+                c.model_drift_strikes for c in self._cells.values()
+            ),
         }

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import json
 import os
+from collections import deque
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
@@ -30,6 +31,12 @@ from repro.utils.timing import RollingStats
 log = get_logger("telemetry.recorder")
 
 TELEMETRY_LOG_VERSION = 1
+
+# Per-format window of (predicted_s, measured_s) pairs kept for cost-model
+# calibration (``CalibratedCostModel.fit_from_telemetry``). Windowed so a
+# long-running server calibrates against recent hardware behaviour, not the
+# full history.
+CALIBRATION_WINDOW = 256
 
 ArmKey = tuple[str, str, str]  # (bucket, objective, fmt)
 
@@ -99,6 +106,8 @@ class TelemetryRecorder:
         self._arms: dict[ArmKey, ArmAggregate] = {}
         self._bucket_features: dict[str, dict] = {}
         self._pending: list[MeasurementRecord] = []
+        # must exist before _replay: replayed records fold calibration pairs
+        self._calibration: dict[str, deque] = {}
         if self.log_path is not None and self.log_path.exists():
             self._replay(self.log_path)
 
@@ -157,6 +166,15 @@ class TelemetryRecorder:
             arm.exploratory_pulls += 1
         if rec.features:
             self._bucket_features[rec.bucket] = dict(rec.features)
+        if (
+            rec.predicted_s is not None
+            and rec.predicted_s > 0.0
+            and rec.measured_s > 0.0
+        ):
+            pairs = self._calibration.get(rec.fmt)
+            if pairs is None:
+                pairs = self._calibration[rec.fmt] = deque(maxlen=CALIBRATION_WINDOW)
+            pairs.append((rec.predicted_s, rec.measured_s))
 
     # --------------------------------------------------------------- queries
     def arm(self, bucket: str, objective: str, fmt: str) -> ArmAggregate | None:
@@ -174,6 +192,18 @@ class TelemetryRecorder:
     def bucket_features(self, bucket: str) -> dict | None:
         return self._bucket_features.get(bucket)
 
+    def calibration_samples(
+        self, fmt: str | None = None
+    ) -> dict[str, list[tuple[float, float]]] | list[tuple[float, float]]:
+        """(predicted_s, measured_s) pairs per format — the calibration input.
+
+        Only records that carried a model prediction contribute; pairs are
+        windowed to the most recent ``CALIBRATION_WINDOW`` per format.
+        """
+        if fmt is not None:
+            return list(self._calibration.get(fmt, ()))
+        return {f: list(pairs) for f, pairs in self._calibration.items()}
+
     def total_observations(self) -> int:
         return sum(a.stats.count for a in self._arms.values())
 
@@ -186,6 +216,9 @@ class TelemetryRecorder:
             "exploratory_pulls": expl,
             "records_dropped": self.records_dropped,
             "pending": len(self._pending),
+            "calibration_samples": sum(
+                len(p) for p in self._calibration.values()
+            ),
         }
 
     # ----------------------------------------------------------- persistence

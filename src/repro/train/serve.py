@@ -169,6 +169,8 @@ class SpmvServer:
         feedback=None,  # optional repro.telemetry.FeedbackLoop
         partition: bool = False,
         max_blocks: int = 8,
+        fused: bool = False,
+        calibrate_every: int = 0,
     ):
         self.session = session
         # default: take the observed path whenever the session can consume
@@ -181,6 +183,15 @@ class SpmvServer:
         self.feedback = feedback
         self.partition = partition
         self.max_blocks = max_blocks
+        # single-launch composite executor on the non-adaptive partitioned
+        # path (the adaptive path needs per-block timing, which one launch
+        # cannot provide)
+        self.fused = fused
+        # recalibrate the session's cost model every N served requests
+        # (0 = never); requires telemetry on the session
+        self.calibrate_every = int(calibrate_every)
+        self.calibrations = 0
+        self._served_since_calibration = 0
         self.batches_served = 0
         self.requests_served = 0
 
@@ -224,10 +235,11 @@ class SpmvServer:
                 self.session.observe_partitioned(res, block_times)
             else:
                 res = self.session.partitioned_optimize(
-                    req.dense, objective, max_blocks=self.max_blocks
+                    req.dense, objective, max_blocks=self.max_blocks,
+                    fused=self.fused,
                 )
                 t0 = time.perf_counter()
-                y = np.asarray(res.kernel(x))
+                y = np.asarray(jax.block_until_ready(res.kernel(x)))
                 dt = time.perf_counter() - t0
             req.y = y
             req.schedule = res.plan.blocks[0].schedule
@@ -273,6 +285,15 @@ class SpmvServer:
                 req.latency_s = dt
         self.batches_served += 1
         self.requests_served += len(requests)
+        self._served_since_calibration += len(requests)
+        if (
+            self.calibrate_every > 0
+            and self.session.telemetry is not None
+            and self._served_since_calibration >= self.calibrate_every
+        ):
+            self.session.calibrate()
+            self.calibrations += 1
+            self._served_since_calibration = 0
         log.info(
             "spmv batch: %d requests, %d unique kernels compiled so far, %s",
             len(requests),
@@ -295,4 +316,6 @@ class SpmvServer:
             out["adaptive"] = self.session.adaptive.summary()
         if self.feedback is not None:
             out["refits"] = self.feedback.refits
+        if self.calibrate_every > 0:
+            out["calibrations"] = self.calibrations
         return out

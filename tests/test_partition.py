@@ -206,7 +206,10 @@ def test_mixed_formats_exactness(rng):
     ref = dense @ x
     y, times = kernel.timed_call(x)
     np.testing.assert_allclose(y, ref, rtol=0, atol=2e-3 * np.abs(ref).max())
-    assert len(times) == part.n_blocks and all(t >= 0 for t in times)
+    # ordinal/shape checks only — no wall-clock thresholds (CI runners are
+    # arbitrarily loaded); timing *quality* is covered by the warmup
+    # regression test in test_partition_fused.py
+    assert len(times) == part.n_blocks and all(t > 0 for t in times)
 
 
 # -------------------------------------------------------------------- session
@@ -259,7 +262,11 @@ def test_serve_partitioned_reports_per_block_identity():
     assert len(res.formats) == k and len(res.exploratory) == k
     x = np.random.default_rng(0).normal(size=dense.shape[1]).astype(np.float32)
     y, times = res.kernel.timed_call(x)
-    session.observe_partitioned(res, times)
+    assert len(times) == k and all(t > 0 for t in times)
+    # feed SYNTHETIC per-block times: the arm bookkeeping under test is
+    # independent of this runner's wall clock, so the assertions stay
+    # deterministic on loaded CI machines
+    session.observe_partitioned(res, [0.01] * k)
     assert session.stats.observations == 1
     # one telemetry/bandit cell per block, keyed by block_arm_bucket
     cells = {block_arm_bucket(res.bucket, i, k) for i in range(k)}

@@ -1,0 +1,312 @@
+"""Fused single-launch partitioned SpMV: equivalence against the sequential
+executor and the dense reference across formats / partitions / dtypes,
+work-descriptor invariants, composite-plan memoization, and the
+``timed_call`` warmup fix (measurement-poisoning regression)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # conftest installs the fallback stub
+    from hypothesis import given, settings, strategies as st  # noqa: F811
+
+from repro.core.objectives import ObjectiveValues
+from repro.core.session import AutoSpmvSession
+from repro.kernels.common import DEFAULT_SCHEDULE, LANE
+from repro.kernels.fused import FusedSpmv, flatten_block, lower_fused
+from repro.kernels.ops import (
+    compile_spmv_fused,
+    evict_kernel_memo_format,
+    kernel_memo_stats,
+    prepare,
+)
+from repro.partition import (
+    CompositePlan,
+    FusedPartitionedSpmv,
+    compile_fused_partitioned,
+    compile_partitioned,
+    partition_rows,
+)
+from repro.partition.plan import BlockPlan
+from repro.sparse.generate import random_matrix
+from repro.sparse.registry import format_names
+
+from tests.test_partition import StubPredictor, hetero_matrix, stub_tuner
+
+_ZERO = ObjectiveValues(0.0, 0.0, 0.0, 0.0)
+
+
+def forced_plan(
+    dense: np.ndarray,
+    fmts: list[str],
+    k: int,
+    schedule=DEFAULT_SCHEDULE,
+) -> CompositePlan:
+    """A CompositePlan with formats assigned round-robin over ``k`` blocks —
+    executor tests force the routing so they exercise lowering, not planning."""
+    part = partition_rows(dense, k)
+    blocks = tuple(
+        BlockPlan(b, fmts[i % len(fmts)], schedule, _ZERO, fmts[i % len(fmts)])
+        for i, b in enumerate(part.blocks)
+    )
+    return CompositePlan("latency", part, blocks, _ZERO, _ZERO, fmts[0], schedule)
+
+
+def _assert_equivalent(dense, plan, x, atol_scale=2e-3):
+    ref = dense.astype(np.float64) @ x.astype(np.float64)
+    tol = atol_scale * max(np.abs(ref).max(), 1e-6)
+    fused = compile_fused_partitioned(dense, plan)
+    seq = compile_partitioned(dense, plan)
+    y_fused = np.asarray(fused(x))
+    y_seq = np.asarray(seq(x))
+    np.testing.assert_allclose(y_seq, ref, rtol=0, atol=tol)
+    np.testing.assert_allclose(y_fused, ref, rtol=0, atol=tol)
+    np.testing.assert_allclose(y_fused, y_seq, rtol=0, atol=tol)
+    return fused
+
+
+# ------------------------------------------------------------- equivalence
+
+
+@pytest.mark.parametrize("fmt", format_names())
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_fused_matches_sequential_per_format(fmt, k, rng):
+    dense = random_matrix(160, 6.0, "powerlaw", seed=11).astype(np.float32)
+    x = rng.normal(size=dense.shape[1]).astype(np.float32)
+    fused = _assert_equivalent(dense, forced_plan(dense, [fmt], k), x)
+    assert fused.formats == (fmt,) * min(k, fused.n_blocks)
+
+
+@pytest.mark.parametrize(
+    "fmts",
+    [["csr", "ell"], ["sell", "bell"], ["csr", "ell", "bell", "sell"]],
+)
+def test_fused_heterogeneous_formats(fmts, rng):
+    dense = hetero_matrix(256)
+    x = rng.normal(size=dense.shape[1]).astype(np.float32)
+    fused = _assert_equivalent(dense, forced_plan(dense, fmts, 4), x)
+    assert fused.n_blocks == 4
+    assert set(fused.formats) == set(fmts)
+
+
+def test_fused_bf16_accumulation(rng):
+    dense = random_matrix(192, 5.0, "banded", seed=3).astype(np.float32)
+    x = rng.normal(size=dense.shape[1]).astype(np.float32)
+    sched = DEFAULT_SCHEDULE.replace(accum_dtype="bfloat16")
+    fused = _assert_equivalent(
+        dense, forced_plan(dense, ["csr", "ell"], 2, sched), x, atol_scale=2e-2
+    )
+    assert fused.kernel.accum_dtype == "bfloat16"
+
+
+# --------------------------------------------------------------- edge cases
+
+
+def test_fused_single_block_plan(rng):
+    dense = random_matrix(96, 4.0, "fem", seed=9).astype(np.float32)
+    x = rng.normal(size=dense.shape[1]).astype(np.float32)
+    fused = _assert_equivalent(dense, forced_plan(dense, ["csr"], 1), x)
+    assert fused.n_blocks == 1
+
+
+def test_fused_all_zero_matrix():
+    dense = np.zeros((64, 64), np.float32)
+    fused = compile_fused_partitioned(dense, forced_plan(dense, ["csr"], 2))
+    y = np.asarray(fused(np.ones(64, np.float32)))
+    assert y.shape == (64,) and not y.any()
+    # a fully-empty composite still gets a (single, all-spill) work item
+    assert fused.n_tiles == 1
+
+
+def test_fused_empty_block_contributes_no_work(rng):
+    # one populated row: the nnz balancer leaves the other blocks empty,
+    # so their streams flatten to zero work items
+    dense = np.zeros((64, 64), np.float32)
+    dense[11] = rng.normal(size=64).astype(np.float32)
+    plan = forced_plan(dense, ["csr"], 4)
+    assert any(bp.block.nnz == 0 for bp in plan.blocks)
+    x = rng.normal(size=64).astype(np.float32)
+    fused = _assert_equivalent(dense, plan, x)
+    populated = {bp.block.index for bp in plan.blocks if bp.block.nnz > 0}
+    assert set(fused.kernel.block_of_tile) <= populated
+
+
+def test_fused_single_hub_row(rng):
+    dense = np.zeros((48, 48), np.float32)
+    dense[17] = rng.normal(size=48).astype(np.float32)
+    x = rng.normal(size=48).astype(np.float32)
+    _assert_equivalent(dense, forced_plan(dense, ["csr", "ell"], 4), x)
+
+
+# ------------------------------------------------------- work descriptor
+
+
+def test_work_descriptor_invariants():
+    dense = hetero_matrix(256)
+    plan = forced_plan(dense, ["csr", "ell", "bell", "sell"], 4)
+    fused = lower_fused(dense, plan)
+    assert isinstance(fused, FusedSpmv)
+    n_tiles, tile = fused.n_tiles, fused.tile
+    assert tile % LANE == 0 and tile % fused.unroll == 0
+    # one flat stream, one tile quantum: program p's operands live at
+    # [tile_map[p] * tile, (tile_map[p] + 1) * tile)
+    assert fused.data.shape[0] == n_tiles * tile
+    tmap = np.asarray(fused.tile_map)
+    assert sorted(tmap.tolist()) == list(range(n_tiles))
+    # block ownership is contiguous in program order (prefix-sum layout)
+    assert list(fused.block_of_tile) == sorted(fused.block_of_tile)
+    assert len(fused.block_of_tile) == n_tiles
+    # padding slots are inert: value 0 aimed at the spill row
+    rows = np.asarray(fused.rows)
+    data = np.asarray(fused.data)
+    assert (rows[data == 0] == fused.n_rows).all() or (data != 0).all()
+    assert (rows <= fused.n_rows).all()
+
+
+def test_flatten_block_is_nnz_exact():
+    dense = random_matrix(96, 7.0, "powerlaw", seed=5).astype(np.float32)
+    nnz = int((dense != 0).sum())
+    for fmt in format_names():
+        mat = prepare(dense, fmt, DEFAULT_SCHEDULE)
+        data, cols, rows = flatten_block(mat, 10)
+        # padding filtered: the stream is exactly the stored nonzeros
+        assert data.size == cols.size == rows.size
+        assert data.size <= nnz and (data != 0).all()
+        recon = np.zeros((106, dense.shape[1]), np.float64)
+        np.add.at(recon, (rows, cols), data.astype(np.float64))
+        np.testing.assert_allclose(recon[10 : 10 + 96], dense, rtol=0, atol=1e-6)
+
+
+# ------------------------------------------------------------------- memo
+
+
+def test_fused_kernel_memoized_per_plan():
+    dense = hetero_matrix(128)
+    plan = forced_plan(dense, ["csr", "ell"], 2)
+    key = "fused-memo-test"
+    before = kernel_memo_stats()
+    k1 = compile_spmv_fused(dense, plan, memo_key=key)
+    k2 = compile_spmv_fused(dense, plan, memo_key=key)
+    after = kernel_memo_stats()
+    assert k1 is k2  # ONE memo entry for the whole composite
+    assert after["compiles"] == before["compiles"] + 1
+    assert after["hits"] == before["hits"] + 1
+    # a different plan over the same matrix is a different entry
+    other = forced_plan(dense, ["sell"], 2)
+    k3 = compile_spmv_fused(dense, other, memo_key=key)
+    assert k3 is not k1
+
+    # retiring ANY constituent format retires the fused composite
+    assert evict_kernel_memo_format("ell") >= 1
+    k4 = compile_spmv_fused(dense, plan, memo_key=key)
+    assert k4 is not k1
+
+
+# ---------------------------------------------------------------- session
+
+
+def test_session_fused_partitioned_optimize(rng):
+    dense = hetero_matrix()
+    x = rng.normal(size=dense.shape[1]).astype(np.float32)
+    session = AutoSpmvSession(stub_tuner())
+    res = session.partitioned_optimize(dense, "latency", fused=True)
+    assert isinstance(res.kernel, FusedPartitionedSpmv)
+    assert res.kernel.n_blocks == res.n_blocks
+    assert res.kernel.formats == res.plan.formats
+    ref = dense @ x
+    np.testing.assert_allclose(
+        np.asarray(res.kernel(x)), ref, rtol=0, atol=2e-3 * np.abs(ref).max()
+    )
+    desc = res.kernel.descriptor()
+    assert len(desc["tile_map"]) == res.kernel.n_tiles
+    assert len(desc["block_ranges"]) == res.n_blocks
+    # the fused and sequential executors cache-share the same plan entry
+    res2 = session.partitioned_optimize(dense, "latency", fused=False)
+    assert res2.cache_hit and res2.plan.formats == res.plan.formats
+
+
+# ------------------------------------------------- timed_call measurement
+
+
+def test_timed_call_warms_up_before_measuring(rng):
+    """Regression: the first measured window must not include trace/compile
+    (it used to seed bandit arms with launch-setup garbage)."""
+    dense = hetero_matrix(256)
+    plan = forced_plan(dense, ["csr", "ell"], 2)
+    kernel = compile_partitioned(dense, plan)
+    calls = []
+
+    def counting(f, idx):
+        def run(x):
+            calls.append(idx)
+            return f(x)
+
+        return run
+
+    kernel.blocks = [
+        dataclasses.replace(b, kernel=counting(b.kernel, i))
+        for i, b in enumerate(kernel.blocks)
+    ]
+    x = rng.normal(size=dense.shape[1]).astype(np.float32)
+    y, times = kernel.timed_call(x)
+    # first timed_call: one untimed warmup + one timed execution per block
+    assert sorted(calls) == [0, 0, 1, 1]
+    assert len(times) == 2 and all(t > 0 for t in times)
+    np.testing.assert_allclose(
+        y, dense @ x, rtol=0, atol=2e-3 * np.abs(dense @ x).max()
+    )
+    calls.clear()
+    kernel.timed_call(x)
+    assert sorted(calls) == [0, 1]  # warmed: no extra executions
+
+    fresh = compile_partitioned(dense, plan)
+    first = fresh.timed_call(x)[1]
+    steady = [fresh.timed_call(x)[1] for _ in range(4)]
+    med = np.median([t for ts in steady for t in ts])
+    # interpret-mode sanity: the first recorded sample sits within a sane
+    # multiple of steady state rather than orders of magnitude above it
+    assert max(first) <= 50 * max(med, 1e-5)
+
+
+def test_timed_call_opt_out_keeps_cold_measurement(rng):
+    dense = hetero_matrix(128)
+    kernel = compile_partitioned(dense, forced_plan(dense, ["csr"], 2))
+    calls = []
+
+    def counting(f, idx):
+        def run(x):
+            calls.append(idx)
+            return f(x)
+
+        return run
+
+    kernel.blocks = [
+        dataclasses.replace(b, kernel=counting(b.kernel, i))
+        for i, b in enumerate(kernel.blocks)
+    ]
+    x = rng.normal(size=dense.shape[1]).astype(np.float32)
+    kernel.timed_call(x, warmup=False)
+    assert sorted(calls) == [0, 1]  # no warmup executions
+
+
+# ------------------------------------------------------------- hypothesis
+
+
+@given(
+    st.integers(min_value=1, max_value=48),
+    st.integers(min_value=1, max_value=5),
+    st.sampled_from(["csr", "ell", "bell", "sell"]),
+    st.sampled_from(["csr", "ell", "bell", "sell"]),
+    st.integers(min_value=0, max_value=6),
+)
+@settings(max_examples=25, deadline=None)
+def test_fused_equivalence_property(n_rows, k, fmt_a, fmt_b, seed):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n_rows, 64)) < 0.15).astype(np.float32)
+    dense *= rng.normal(size=dense.shape).astype(np.float32)
+    x = rng.normal(size=64).astype(np.float32)
+    plan = forced_plan(dense, [fmt_a, fmt_b], k)
+    _assert_equivalent(dense, plan, x)
