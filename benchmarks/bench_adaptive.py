@@ -43,6 +43,9 @@ from repro.kernels.common import DEFAULT_SCHEDULE
 from repro.kernels.ops import clear_kernel_memo
 from repro.sparse.registry import format_names
 from repro.sparse.generate import random_matrix
+from repro.utils.logging import get_logger
+
+log = get_logger("bench.adaptive")
 from repro.telemetry import (
     AdaptiveConfig,
     AdaptiveFormatSelector,
@@ -199,10 +202,13 @@ def run(scale_name: str = "paper") -> dict:
         ["mode", "cum.regret", "reconverged@", "invalidations", "explorations"],
         rows,
     )
-    print(
-        f"classifier accuracy (latency): {acc_before:.2f} -> {acc_after:.2f} "
-        f"after refit on {refit.get('latency', 0)} telemetry labels; "
-        f"telemetry restart check: {reloaded.total_observations()} records replayed"
+    log.info(
+        "classifier accuracy (latency): %.2f -> %.2f after refit on %d "
+        "telemetry labels; telemetry restart check: %d records replayed",
+        acc_before,
+        acc_after,
+        refit.get("latency", 0),
+        reloaded.total_observations(),
     )
 
     assert adaptive_regret < static_regret, "adaptive must beat the static misprediction"

@@ -18,6 +18,9 @@ import repro.sparse.bcsr  # noqa: F401  (plugin activation: registers "bcsr")
 from repro.kernels.common import DEFAULT_SCHEDULE, KernelSchedule
 from repro.sparse import format_names, get_format
 from repro.sparse.generate import random_matrix
+from repro.utils.logging import get_logger
+
+log = get_logger("bench.formats")
 
 SCALES = {
     "smoke": dict(n=256, avg=6.0, reps=1),
@@ -31,7 +34,7 @@ def run(scale: str = "ci") -> dict:
     n, avg, reps = cfg["n"], cfg["avg"], cfg["reps"]
     rng = np.random.default_rng(0)
     out = {}
-    print(f"registered formats: {format_names()}")
+    log.info("registered formats: %s", format_names())
     for pattern in ("fem", "powerlaw"):
         dense = random_matrix(n, avg, pattern, seed=7).astype(np.float32)
         x = rng.normal(size=dense.shape[1]).astype(np.float32)
@@ -62,10 +65,12 @@ def run(scale: str = "ci") -> dict:
     bell = get_format("bell").prepare(skew, sched)
     bcsr = get_format("bcsr").prepare(skew, sched)
     ratio = bcsr.data.size / max(bell.data.size, 1)
-    print(
-        f"\nBELL vs BCSR stored blocks on skewed occupancy: "
-        f"{bell.data.size // (8 * 128)} vs {bcsr.data.size // (8 * 128)} "
-        f"({ratio:.0%} of BELL storage)"
+    log.info(
+        "BELL vs BCSR stored blocks on skewed occupancy: %d vs %d (%.0f%% of "
+        "BELL storage)",
+        bell.data.size // (8 * 128),
+        bcsr.data.size // (8 * 128),
+        100.0 * ratio,
     )
     out["bcsr_vs_bell_storage_ratio"] = ratio
     return out

@@ -38,6 +38,9 @@ from repro.partition import (
 )
 from repro.telemetry import TelemetryRecorder
 from repro.sparse.generate import MATRIX_NAMES, random_matrix
+from repro.utils.logging import get_logger
+
+log = get_logger("bench.partition")
 
 SCALES = {
     "smoke": dict(n=512, band_avg=128.0, tail_avg=3.0, train_scale=0.0008,
@@ -205,15 +208,23 @@ def run(scale: str = "ci") -> dict:
              100.0 * plan_h.gain()],
         ],
     )
-    print(
-        f"hetero: measured {t_fused*1e3:.2f} ms fused vs {t_part*1e3:.2f} ms "
-        f"sequential partitioned vs {t_mono*1e3:.2f} ms monolithic (interpret "
-        f"mode); sharded over {n_dev} device(s), rel err {err_sh:.2e}"
+    log.info(
+        "hetero: measured %.2f ms fused vs %.2f ms sequential partitioned vs "
+        "%.2f ms monolithic (interpret mode); sharded over %d device(s), rel "
+        "err %.2e",
+        t_fused * 1e3,
+        t_part * 1e3,
+        t_mono * 1e3,
+        n_dev,
+        err_sh,
     )
-    print(
-        f"calibration: {out['calibration']['samples']} per-block samples, "
-        f"mean rel err {mre_raw:.2f} uncalibrated -> {mre_cal:.2f} calibrated; "
-        f"calibrated planner picks k={plan_cal.n_blocks}"
+    log.info(
+        "calibration: %d per-block samples, mean rel err %.2f uncalibrated "
+        "-> %.2f calibrated; calibrated planner picks k=%d",
+        out["calibration"]["samples"],
+        mre_raw,
+        mre_cal,
+        plan_cal.n_blocks,
     )
     save_result("bench_partition", out)
     return out

@@ -23,6 +23,9 @@ from benchmarks.common import ART, SCALES, get_predictor, print_table, save_resu
 from repro.core import AutoSpMV, AutoSpmvSession, OverheadPredictor, measure_overheads
 from repro.kernels.ops import clear_kernel_memo
 from repro.sparse.generate import MATRIX_NAMES, generate_by_name
+from repro.utils.logging import get_logger
+
+log = get_logger("bench.session_cache")
 
 N_UNIQUE = 5  # distinct matrices in the pool
 REPEATS = 4  # each submitted this many times -> 20 requests minimum
@@ -88,9 +91,15 @@ def run(scale_name: str = "paper", cache_path: str | None = None) -> dict:
         rows,
     )
     speedup = cold["seconds"] / max(warm["seconds"], 1e-9)
-    print(f"warm speedup over cold: {speedup:.1f}x "
-          f"(plan inferences {cold['plans_computed']} -> {warm['plans_computed']}, "
-          f"kernel compiles {cold['kernel_compiles']} -> {warm['kernel_compiles']})")
+    log.info(
+        "warm speedup over cold: %.1fx (plan inferences %d -> %d, kernel "
+        "compiles %d -> %d)",
+        speedup,
+        cold["plans_computed"],
+        warm["plans_computed"],
+        cold["kernel_compiles"],
+        warm["kernel_compiles"],
+    )
 
     payload = {
         "n_requests": len(mats),

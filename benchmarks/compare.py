@@ -1,0 +1,128 @@
+"""Bench-regression gate: compare a fresh ``BENCH_<label>.json`` against the
+committed baseline (``benchmarks/baseline/BENCH_smoke.json``).
+
+Absolute wall times on shared CI runners are too noisy to gate on, so the
+gate compares the *fused-vs-sequential latency ratio* of the partition bench
+— both measurements come from the same process on the same machine, so the
+ratio cancels the runner's speed. A run fails when the current ratio is more
+than ``--threshold`` (default 25%) worse than the baseline ratio AND the
+fused executor is no longer at least ``--min-margin``× faster than the
+sequential one (the margin guard keeps a 300×-faster kernel from failing CI
+over ratio jitter that is still two orders of magnitude inside the win).
+
+Also asserts every benchmark the baseline ran still exists and passed.
+
+CLI::
+
+    python -m benchmarks.compare artifacts/bench/BENCH_smoke.json \
+        --baseline benchmarks/baseline/BENCH_smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.utils.logging import get_logger
+
+log = get_logger("bench.compare")
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline" / "BENCH_smoke.json"
+
+FUSED_KEY = "hetero/measured_fused_s"
+SEQUENTIAL_KEY = "hetero/measured_partitioned_s"
+
+
+def _bench_metrics(report: dict, name: str) -> dict | None:
+    for bench in report.get("benchmarks", ()):
+        if bench.get("name") == name:
+            return bench.get("metrics") or {}
+    return None
+
+
+def fused_ratio(report: dict) -> float | None:
+    """fused / sequential latency of the partition bench (lower = better)."""
+    metrics = _bench_metrics(report, "partition")
+    if not metrics:
+        return None
+    fused = metrics.get(FUSED_KEY)
+    seq = metrics.get(SEQUENTIAL_KEY)
+    if not fused or not seq or seq <= 0:
+        return None
+    return float(fused) / float(seq)
+
+
+def compare(
+    current: dict,
+    baseline: dict,
+    *,
+    threshold: float = 0.25,
+    min_margin: float = 10.0,
+) -> tuple[bool, list[str]]:
+    """Returns (ok, report lines)."""
+    lines: list[str] = []
+    ok = True
+
+    base_names = {b.get("name") for b in baseline.get("benchmarks", ())}
+    cur_by_name = {b.get("name"): b for b in current.get("benchmarks", ())}
+    for name in sorted(base_names):
+        bench = cur_by_name.get(name)
+        if bench is None:
+            ok = False
+            lines.append(f"MISSING: baseline bench {name!r} was not run")
+        elif not bench.get("ok"):
+            ok = False
+            lines.append(f"FAILED: bench {name!r} did not pass")
+
+    cur_ratio, base_ratio = fused_ratio(current), fused_ratio(baseline)
+    if base_ratio is None:
+        lines.append("baseline has no fused/sequential measurement; ratio gate skipped")
+    elif cur_ratio is None:
+        ok = False
+        lines.append("REGRESSION: current run lost the fused/sequential measurement")
+    else:
+        rel = cur_ratio / base_ratio - 1.0
+        lines.append(
+            f"fused/sequential ratio: {cur_ratio:.4g} vs baseline "
+            f"{base_ratio:.4g} ({rel:+.1%})"
+        )
+        if rel > threshold and cur_ratio > 1.0 / min_margin:
+            ok = False
+            lines.append(
+                f"REGRESSION: ratio degraded {rel:+.1%} (> {threshold:.0%}) and "
+                f"fused is no longer {min_margin:g}x faster than sequential"
+            )
+        elif rel > threshold:
+            lines.append(
+                f"ratio degraded {rel:+.1%} but fused remains >{min_margin:g}x "
+                "faster than sequential; inside the noise margin"
+            )
+    return ok, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("results", help="fresh BENCH_<label>.json to check")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="committed baseline results file")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max relative ratio degradation before failing")
+    ap.add_argument("--min-margin", type=float, default=10.0,
+                    help="never fail while fused stays this many times "
+                         "faster than sequential")
+    args = ap.parse_args(argv)
+
+    current = json.loads(Path(args.results).read_text())
+    baseline = json.loads(Path(args.baseline).read_text())
+    ok, lines = compare(
+        current, baseline, threshold=args.threshold, min_margin=args.min_margin
+    )
+    for line in lines:
+        (log.info if ok else log.error)("%s", line)
+    log.info("bench regression gate: %s", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

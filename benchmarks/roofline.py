@@ -9,6 +9,9 @@ import json
 from pathlib import Path
 
 from benchmarks.common import print_table, save_result
+from repro.utils.logging import get_logger
+
+log = get_logger("bench.roofline")
 
 DRYRUN_DIR = Path("artifacts/dryrun")
 
@@ -58,7 +61,7 @@ def run(scale_name: str = "paper", dryrun_dir: Path = DRYRUN_DIR) -> dict:
         fmt="9.3g",
     )
     if skipped:
-        print(f"\nskipped cells (documented): {sorted(set(payload['skipped']))}")
+        log.info("skipped cells (documented): %s", sorted(set(payload["skipped"])))
     tagged = [a for a in arts if "roofline" in a and a.get("tag")]
     if tagged:
         rows_t = []
@@ -91,8 +94,12 @@ def run(scale_name: str = "paper", dryrun_dir: Path = DRYRUN_DIR) -> dict:
     Path("artifacts").mkdir(exist_ok=True)
     Path("artifacts/roofline.md").write_text("\n".join(md) + "\n")
     save_result("roofline", payload)
-    print(f"\n{len(done)} cells analysed, {len(skipped)} documented skips; "
-          "markdown -> artifacts/roofline.md")
+    log.info(
+        "%d cells analysed, %d documented skips; markdown -> "
+        "artifacts/roofline.md",
+        len(done),
+        len(skipped),
+    )
     return payload
 
 

@@ -5,20 +5,30 @@ report. ``python -m benchmarks.run [--scale ci|paper] [--only fig9,table5]``.
 (the session-cache, adaptive-telemetry, partition, and format-sweep ones,
 which skip dataset-wide predictor sweeps) at the smallest scale.
 
-Every run also writes a machine-readable ``BENCH_PR6.json`` next to the
+Every run also writes a machine-readable ``BENCH_<label>.json`` next to the
 other artifacts (``artifacts/bench/`` by default): one record per executed
 benchmark with its name, scale, duration, and the numeric metrics flattened
-out of the payload its ``run()`` returned. CI runs the smoke tier and
-uploads the artifact, so the bench trajectory is a queryable time series
-instead of log text.
+out of the payload its ``run()`` returned. The label comes from ``--label``,
+the ``BENCH_LABEL`` environment variable, or the current git short sha (CI
+passes ``--label smoke``, so the artifact name is stable across PRs). CI
+runs the smoke tier, uploads the artifact, and gates on
+``benchmarks/compare.py`` against the committed baseline — the bench
+trajectory is a queryable, regression-checked time series instead of log
+text.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import time
 import traceback
+
+from repro.utils.logging import get_logger
+
+log = get_logger("bench.run")
 
 BENCHES = [
     ("fig3", "benchmarks.fig3_default_vs_auto", "Fig.3 default vs Auto-SpMV (consph)"),
@@ -41,8 +51,28 @@ BENCHES = [
 
 SMOKE_BENCHES = ("session_cache", "adaptive", "partition", "formats")
 
-RESULTS_FILE = "BENCH_PR6.json"
 _MAX_METRICS = 400  # per bench: keep the artifact readable, not exhaustive
+
+
+def default_label() -> str:
+    """Artifact label when ``--label`` is omitted: env var, then git sha."""
+    env = os.environ.get("BENCH_LABEL", "").strip()
+    if env:
+        return env
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        if sha:
+            return sha
+    except OSError:
+        pass
+    return "local"
+
+
+def results_file(label: str) -> str:
+    return f"BENCH_{label}.json"
 
 
 def _numeric_metrics(payload, prefix: str = "", out: dict | None = None) -> dict:
@@ -70,14 +100,18 @@ def _numeric_metrics(payload, prefix: str = "", out: dict | None = None) -> dict
     return out
 
 
-def write_results(records: list[dict], scale: str, total_s: float) -> str:
+def write_results(
+    records: list[dict], scale: str, total_s: float, label: str | None = None
+) -> str:
     from benchmarks.common import ART
 
+    label = label or default_label()
     ART.mkdir(parents=True, exist_ok=True)
-    path = ART / RESULTS_FILE
+    path = ART / results_file(label)
     path.write_text(
         json.dumps(
             {
+                "label": label,
                 "scale": scale,
                 "total_s": total_s,
                 "benchmarks": records,
@@ -95,6 +129,9 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--smoke", action="store_true",
                     help="sub-minute tier: smoke benches at the smallest scale")
+    ap.add_argument("--label", default=None,
+                    help="results-artifact label: BENCH_<label>.json "
+                         "(default: $BENCH_LABEL, then the git short sha)")
     args = ap.parse_args(argv)
     scale = "smoke" if args.smoke else args.scale
     if args.only:
@@ -109,7 +146,7 @@ def main(argv=None) -> int:
     for name, module, title in BENCHES:
         if only and name not in only:
             continue
-        print(f"\n{'='*72}\n[{name}] {title}\n{'='*72}")
+        log.info("[%s] %s", name, title)
         t0 = time.time()
         record = {"name": name, "title": title, "scale": scale}
         try:
@@ -119,7 +156,7 @@ def main(argv=None) -> int:
             payload = mod.run(scale)
             record["ok"] = True
             record["metrics"] = _numeric_metrics(payload) if payload else {}
-            print(f"[{name}] done in {time.time()-t0:.1f}s")
+            log.info("[%s] done in %.1fs", name, time.time() - t0)
         except Exception:
             traceback.print_exc()
             failures.append(name)
@@ -128,10 +165,12 @@ def main(argv=None) -> int:
         record["duration_s"] = time.time() - t0
         records.append(record)
     total_s = time.time() - t_all
-    results_path = write_results(records, scale, total_s)
-    print(f"\nall benchmarks finished in {total_s:.1f}s; results -> {results_path}")
+    results_path = write_results(records, scale, total_s, args.label)
+    log.info(
+        "all benchmarks finished in %.1fs; results -> %s", total_s, results_path
+    )
     if failures:
-        print(f"FAILED: {failures}")
+        log.error("FAILED: %s", failures)
         return 1
     return 0
 

@@ -25,10 +25,17 @@ import numpy as np
 
 from repro.core.features import SparsityFeatures
 from repro.kernels.common import KernelSchedule
+from repro.obs.metrics import get_metrics
 from repro.utils.io import atomic_write_text
 from repro.utils.logging import get_logger
 
 log = get_logger("core.cache")
+
+# process-wide plan-cache counters: instrument handles are module-cached so
+# the hot path pays one enabled-check + one add, nothing else
+_HITS = get_metrics().counter("spmv_cache_hits_total")
+_MISSES = get_metrics().counter("spmv_cache_misses_total")
+_INVALIDATED = get_metrics().counter("spmv_cache_invalidations_total")
 
 CACHE_FORMAT_VERSION = 1
 
@@ -105,8 +112,10 @@ class TuningCache:
         entry = self._entries.get(self._key(bucket, objective, mode))
         if entry is None:
             self.misses += 1
+            _MISSES.inc()
             return None
         self.hits += 1
+        _HITS.inc()
         entry.hits += 1
         return entry
 
@@ -150,6 +159,7 @@ class TuningCache:
         for k in doomed:
             del self._entries[k]
         if doomed:
+            _INVALIDATED.inc(len(doomed))
             log.info(
                 "invalidated %d plan(s) for bucket=%s objective=%s mode=%s",
                 len(doomed),

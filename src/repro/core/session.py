@@ -55,6 +55,7 @@ from repro.kernels.ops import (
     kernel_memoized,
     matrix_fingerprint,
 )
+from repro.obs.trace import span as _span
 from repro.sparse.registry import default_format, format_names
 from repro.utils.logging import get_logger
 
@@ -293,27 +294,32 @@ class AutoSpmvSession:
         fingerprint: str | None = None,
     ) -> CompileTimeResult:
         self.stats.requests += 1
-        fp, feats, bucket = self._analyze(dense, fingerprint)
-        entry = self.cache.get(bucket, objective, "compile")
-        if entry is None:
-            plan = self.tuner.plan_compile_time(feats, objective)
-            self.stats.plans_computed += 1
-            self.stats.cache_misses += 1
-            entry = self.cache.put(
-                CacheEntry(
-                    bucket=bucket,
-                    objective=objective,
-                    mode="compile",
-                    fmt=default_format(),
-                    schedule=plan.schedule.as_dict(),
-                    predicted=dict(plan.predicted),
+        with _span("session.optimize", mode="compile", objective=objective) as sp:
+            fp, feats, bucket = self._analyze(dense, fingerprint)
+            with _span("cache.lookup", bucket=bucket, mode="compile"):
+                entry = self.cache.get(bucket, objective, "compile")
+            hit = entry is not None
+            if entry is None:
+                with _span("plan.compute", bucket=bucket, mode="compile"):
+                    plan = self.tuner.plan_compile_time(feats, objective)
+                self.stats.plans_computed += 1
+                self.stats.cache_misses += 1
+                entry = self.cache.put(
+                    CacheEntry(
+                        bucket=bucket,
+                        objective=objective,
+                        mode="compile",
+                        fmt=default_format(),
+                        schedule=plan.schedule.as_dict(),
+                        predicted=dict(plan.predicted),
+                    )
                 )
-            )
-            log.info("compile-time miss: bucket=%s -> %s", bucket, plan.schedule)
-        else:
-            self.stats.cache_hits += 1
-        schedule = entry.kernel_schedule()
-        kernel = self._compile(dense, fp, default_format(), schedule)
+                log.info("compile-time miss: bucket=%s -> %s", bucket, plan.schedule)
+            else:
+                self.stats.cache_hits += 1
+            sp.set(bucket=bucket, cache_hit=hit)
+            schedule = entry.kernel_schedule()
+            kernel = self._compile(dense, fp, default_format(), schedule)
         return CompileTimeResult(feats, schedule, kernel, dict(entry.predicted))
 
     # -------------------------------------------------------------- run time
@@ -329,62 +335,73 @@ class AutoSpmvSession:
     ) -> RunTimeResult:
         current_format = current_format or default_format()
         self.stats.requests += 1
-        fp, feats, bucket = self._analyze(dense, fingerprint)
-        mode = _run_mode_key(current_format, schedule)
-        entry = self.cache.get(bucket, objective, mode)
-        if entry is None:
-            plan = self.tuner.plan_run_time(
-                feats, objective, current_format=current_format, schedule=schedule
-            )
-            self.stats.plans_computed += 1
-            self.stats.cache_misses += 1
-            self.cache.put(
-                CacheEntry(
-                    bucket=bucket,
-                    objective=objective,
-                    mode=mode,
-                    fmt=plan.best_format,
-                    schedule=schedule.as_dict(),
-                    gain_per_iter=plan.gain_per_iter,
-                    latency_gain_per_iter=plan.latency_gain_per_iter,
-                    overhead_s=plan.overhead_s,
-                    convert_overhead_s=plan.convert_overhead_s,
+        with _span("session.optimize", mode="run", objective=objective) as sp:
+            fp, feats, bucket = self._analyze(dense, fingerprint)
+            mode = _run_mode_key(current_format, schedule)
+            with _span("cache.lookup", bucket=bucket, mode=mode):
+                entry = self.cache.get(bucket, objective, mode)
+            sp.set(bucket=bucket, cache_hit=entry is not None)
+            if entry is None:
+                with _span("plan.compute", bucket=bucket, mode=mode):
+                    plan = self.tuner.plan_run_time(
+                        feats,
+                        objective,
+                        current_format=current_format,
+                        schedule=schedule,
+                    )
+                self.stats.plans_computed += 1
+                self.stats.cache_misses += 1
+                self.cache.put(
+                    CacheEntry(
+                        bucket=bucket,
+                        objective=objective,
+                        mode=mode,
+                        fmt=plan.best_format,
+                        schedule=schedule.as_dict(),
+                        gain_per_iter=plan.gain_per_iter,
+                        latency_gain_per_iter=plan.latency_gain_per_iter,
+                        overhead_s=plan.overhead_s,
+                        convert_overhead_s=plan.convert_overhead_s,
+                    )
                 )
-            )
-            # first sight of this bucket: pay the decision terms, but credit
-            # the conversion term if the kernel is already memoized (e.g. a
-            # plan for another objective converted this matrix earlier)
-            overhead_eff = plan.overhead_s
-            if kernel_memoized(
-                fp, plan.best_format, schedule, interpret=self.tuner.interpret
-            ):
-                overhead_eff -= plan.convert_overhead_s
-            self.stats.overhead_paid_s += overhead_eff
-        else:
-            self.stats.cache_hits += 1
-            plan = RunTimePlan(
-                entry.fmt,
-                entry.gain_per_iter,
-                entry.latency_gain_per_iter,
-                entry.overhead_s,
-                entry.convert_overhead_s,
-            )
-            # §5.3 amortization: the decision terms (f, o, p) were paid when
-            # the bucket was first tuned; conversion (c) only re-applies if
-            # the prepared kernel is not actually memoized in this process.
-            if kernel_memoized(
-                fp, plan.best_format, schedule, interpret=self.tuner.interpret
-            ):
-                overhead_eff = 0.0
+                # first sight of this bucket: pay the decision terms, but
+                # credit the conversion term if the kernel is already
+                # memoized (e.g. a plan for another objective converted this
+                # matrix earlier)
+                overhead_eff = plan.overhead_s
+                if kernel_memoized(
+                    fp, plan.best_format, schedule, interpret=self.tuner.interpret
+                ):
+                    overhead_eff -= plan.convert_overhead_s
+                self.stats.overhead_paid_s += overhead_eff
             else:
-                overhead_eff = plan.convert_overhead_s
-            self.stats.overhead_saved_s += plan.overhead_s - overhead_eff
-        convert = should_convert(
-            plan, n_iterations, current_format, overhead_s=overhead_eff
-        )
-        kernel = (
-            self._compile(dense, fp, plan.best_format, schedule) if convert else None
-        )
+                self.stats.cache_hits += 1
+                plan = RunTimePlan(
+                    entry.fmt,
+                    entry.gain_per_iter,
+                    entry.latency_gain_per_iter,
+                    entry.overhead_s,
+                    entry.convert_overhead_s,
+                )
+                # §5.3 amortization: the decision terms (f, o, p) were paid
+                # when the bucket was first tuned; conversion (c) only
+                # re-applies if the prepared kernel is not actually memoized
+                # in this process.
+                if kernel_memoized(
+                    fp, plan.best_format, schedule, interpret=self.tuner.interpret
+                ):
+                    overhead_eff = 0.0
+                else:
+                    overhead_eff = plan.convert_overhead_s
+                self.stats.overhead_saved_s += plan.overhead_s - overhead_eff
+            convert = should_convert(
+                plan, n_iterations, current_format, overhead_s=overhead_eff
+            )
+            kernel = (
+                self._compile(dense, fp, plan.best_format, schedule)
+                if convert
+                else None
+            )
         log.info(
             "run-time(session): obj=%s bucket=%s fmt %s->%s overhead=%.3gs convert=%s",
             objective,
@@ -507,56 +524,62 @@ class AutoSpmvSession:
         from repro.partition.partitioner import SUPPORTED_BLOCK_COUNTS
 
         self.stats.requests += 1
-        fp, feats, bucket = self._analyze(dense, fingerprint)
-        mode = _part_mode_key(max_blocks)
-        entry = self.cache.get(bucket, objective, mode)
-        plan = self._replay_partitioned(dense, entry) if entry is not None else None
-        cache_hit = plan is not None
-        if plan is None:
-            block_counts = tuple(
-                k for k in SUPPORTED_BLOCK_COUNTS if k <= max_blocks
-            ) or (1,)
-            plan = self.tuner.plan_partitioned(
-                dense, objective, block_counts=block_counts,
-                cost_model=self.cost_model,
-            )
-            self.stats.plans_computed += 1
-            self.stats.cache_misses += 1
-            self.cache.put(
-                CacheEntry(
-                    bucket=bucket,
-                    objective=objective,
-                    mode=mode,
-                    fmt="+".join(plan.formats),
-                    schedule=plan.blocks[0].schedule.as_dict(),
-                    predicted={
-                        "latency": plan.modeled.latency,
-                        "monolithic_latency": plan.monolithic.latency,
-                    },
-                    n_blocks=plan.n_blocks,
-                    blocks=[bp.as_dict() for bp in plan.blocks],
-                    monolithic_fmt=plan.monolithic_fmt,
+        with _span(
+            "session.optimize", mode="partitioned", objective=objective, fused=fused
+        ) as sp:
+            fp, feats, bucket = self._analyze(dense, fingerprint)
+            mode = _part_mode_key(max_blocks)
+            with _span("cache.lookup", bucket=bucket, mode=mode):
+                entry = self.cache.get(bucket, objective, mode)
+            plan = self._replay_partitioned(dense, entry) if entry is not None else None
+            cache_hit = plan is not None
+            sp.set(bucket=bucket, cache_hit=cache_hit)
+            if plan is None:
+                block_counts = tuple(
+                    k for k in SUPPORTED_BLOCK_COUNTS if k <= max_blocks
+                ) or (1,)
+                with _span("plan.compute", bucket=bucket, mode=mode):
+                    plan = self.tuner.plan_partitioned(
+                        dense, objective, block_counts=block_counts,
+                        cost_model=self.cost_model,
+                    )
+                self.stats.plans_computed += 1
+                self.stats.cache_misses += 1
+                self.cache.put(
+                    CacheEntry(
+                        bucket=bucket,
+                        objective=objective,
+                        mode=mode,
+                        fmt="+".join(plan.formats),
+                        schedule=plan.blocks[0].schedule.as_dict(),
+                        predicted={
+                            "latency": plan.modeled.latency,
+                            "monolithic_latency": plan.monolithic.latency,
+                        },
+                        n_blocks=plan.n_blocks,
+                        blocks=[bp.as_dict() for bp in plan.blocks],
+                        monolithic_fmt=plan.monolithic_fmt,
+                    )
                 )
-            )
-            log.info(
-                "partitioned miss: bucket=%s -> k=%d formats=%s (gain %.1f%%)",
-                bucket,
-                plan.n_blocks,
-                "+".join(plan.formats),
-                100.0 * plan.gain(),
-            )
-        else:
-            self.stats.cache_hits += 1
-        before = kernel_memo_stats()["compiles"]
-        if fused:
-            kernel = compile_fused_partitioned(
-                dense, plan, interpret=self.tuner.interpret, memo_key=fp
-            )
-        else:
-            kernel = compile_partitioned(
-                dense, plan, interpret=self.tuner.interpret, memo_key=fp
-            )
-        self.stats.kernel_compiles += kernel_memo_stats()["compiles"] - before
+                log.info(
+                    "partitioned miss: bucket=%s -> k=%d formats=%s (gain %.1f%%)",
+                    bucket,
+                    plan.n_blocks,
+                    "+".join(plan.formats),
+                    100.0 * plan.gain(),
+                )
+            else:
+                self.stats.cache_hits += 1
+            before = kernel_memo_stats()["compiles"]
+            if fused:
+                kernel = compile_fused_partitioned(
+                    dense, plan, interpret=self.tuner.interpret, memo_key=fp
+                )
+            else:
+                kernel = compile_partitioned(
+                    dense, plan, interpret=self.tuner.interpret, memo_key=fp
+                )
+            self.stats.kernel_compiles += kernel_memo_stats()["compiles"] - before
         return PartitionedResult(
             fingerprint=fp,
             features=feats,

@@ -29,6 +29,14 @@ from repro.kernels.common import (
     InfeasibleConfig,  # noqa: F401  (canonical home moved to kernels.common)
     KernelSchedule,
 )
+from repro.obs.metrics import get_metrics
+from repro.obs.trace import span as _span
+
+# memo counters mirrored into the process metrics registry so the /metrics
+# scrape sees kernel-compile economics without importing this module
+_M_HITS = get_metrics().counter("spmv_kernel_memo_hits_total")
+_M_COMPILES = get_metrics().counter("spmv_kernel_memo_compiles_total")
+_M_EVICTIONS = get_metrics().counter("spmv_kernel_memo_evictions_total")
 
 
 def __getattr__(name):
@@ -143,6 +151,7 @@ def set_kernel_memo_limit(limit: int) -> None:
     while len(_KERNEL_MEMO) > _MEMO_LIMIT:
         _KERNEL_MEMO.popitem(last=False)
         _MEMO_STATS["evictions"] += 1
+        _M_EVICTIONS.inc()
 
 
 def kernel_memoized(
@@ -187,6 +196,7 @@ def evict_kernel_memo_format(fmt: str) -> int:
     for k in stale:
         del _KERNEL_MEMO[k]
         _MEMO_STATS["evictions"] += 1
+        _M_EVICTIONS.inc()
     return len(stale)
 
 
@@ -210,17 +220,21 @@ def compile_spmv(
         hit = _KERNEL_MEMO.get(key)
         if hit is not None:
             _MEMO_STATS["hits"] += 1
+            _M_HITS.inc()
             _KERNEL_MEMO.move_to_end(key)
             return hit
-    prepared = PreparedSpmv(prepare(dense, fmt, schedule), schedule, interpret)
+    with _span("kernel.compile", fmt=fmt):
+        prepared = PreparedSpmv(prepare(dense, fmt, schedule), schedule, interpret)
     if memo_key is not None:
         # counters cover memoized traffic only, so hits/(hits+compiles) is a
         # true memo hit rate (plain one-off compiles don't skew it)
         _MEMO_STATS["compiles"] += 1
+        _M_COMPILES.inc()
         _KERNEL_MEMO[key] = prepared
         while len(_KERNEL_MEMO) > _MEMO_LIMIT:
             _KERNEL_MEMO.popitem(last=False)
             _MEMO_STATS["evictions"] += 1
+            _M_EVICTIONS.inc()
     return prepared
 
 
@@ -284,13 +298,17 @@ def compile_spmv_fused(
         hit = _KERNEL_MEMO.get(key)
         if hit is not None:
             _MEMO_STATS["hits"] += 1
+            _M_HITS.inc()
             _KERNEL_MEMO.move_to_end(key)
             return hit
-    kernel = lower_fused(dense, plan, interpret=interpret)
+    with _span("kernel.compile", fused=True, formats="+".join(bp.fmt for bp in plan.blocks)):
+        kernel = lower_fused(dense, plan, interpret=interpret)
     if key is not None:
         _MEMO_STATS["compiles"] += 1
+        _M_COMPILES.inc()
         _KERNEL_MEMO[key] = kernel
         while len(_KERNEL_MEMO) > _MEMO_LIMIT:
             _KERNEL_MEMO.popitem(last=False)
             _MEMO_STATS["evictions"] += 1
+            _M_EVICTIONS.inc()
     return kernel

@@ -143,6 +143,8 @@ def serve_spmv(args) -> list[SpmvRequest]:
         fused=args.fused,
         calibrate_every=args.calibrate_every,
     )
+    if args.metrics_port is not None:
+        server.start_metrics_server(args.metrics_port)
     if args.partition:
         log.info(
             "partitioned serving: composite plans up to %d nnz-balanced row "
@@ -159,7 +161,13 @@ def serve_spmv(args) -> list[SpmvRequest]:
         dense = generate_by_name(str(rng.choice(pool)), scale=args.spmv_scale)
         x = rng.normal(size=dense.shape[1]).astype(np.float32)
         reqs.append(SpmvRequest(rid=i, dense=dense, x=x, objective=args.objective))
-    done = server.run(reqs)
+    if args.profile_dir:
+        from repro.obs import profile_capture
+
+        with profile_capture(args.profile_dir):
+            done = server.run(reqs)
+    else:
+        done = server.run(reqs)
 
     for r in done:
         ref = r.dense @ r.x
@@ -190,6 +198,18 @@ def serve_spmv(args) -> list[SpmvRequest]:
     if args.spmv_cache:
         session.save()
         log.info("tuning cache saved to %s", args.spmv_cache)
+    if args.metrics_export:
+        from repro.obs import get_metrics
+
+        get_metrics().write_shard(args.metrics_export, args.obs_instance)
+        log.info("metrics shard -> %s", args.metrics_export)
+    if args.trace_export:
+        from repro.obs import get_tracer
+
+        n = get_tracer().export_jsonl(args.trace_export)
+        log.info("trace shard -> %s (%d spans)", args.trace_export, n)
+    if args.metrics_port is not None:
+        server.stop_metrics_server()
     return done
 
 
@@ -240,6 +260,21 @@ def main(argv=None):
                          "(0=off; implies --telemetry)")
     ap.add_argument("--objective", default="latency",
                     choices=["latency", "energy", "power", "efficiency"])
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="SpMV mode: serve Prometheus /metrics (+ /healthz, "
+                         "/obs) on this port from a daemon thread (0 = "
+                         "ephemeral)")
+    ap.add_argument("--metrics-export", default=None,
+                    help="write the metrics registry as a JSONL shard here "
+                         "after serving (obs/aggregate.py input)")
+    ap.add_argument("--trace-export", default=None,
+                    help="append the collected spans as a JSONL shard here "
+                         "after serving (obs/aggregate.py input)")
+    ap.add_argument("--obs-instance", default="serve",
+                    help="instance label stamped into exported shards")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture the serving run with jax.profiler into "
+                         "this directory (Perfetto/TensorBoard viewable)")
     args = ap.parse_args(argv)
 
     if args.spmv:

@@ -1,0 +1,71 @@
+"""Unified observability: tracing, metrics, energy accounting, aggregation.
+
+The paper's claims are about *measured* latency, energy, average power, and
+efficiency; this package is how the serving reproduction observes all four
+instead of just wall clock. Four pieces, threaded through every hot path:
+
+* ``trace``   — nested spans (``session.optimize`` → ``cache.lookup`` →
+  ``kernel.compile`` → ``kernel.execute``) with crash-tolerant JSONL export
+  and an optional ``jax.profiler`` (Perfetto) capture hook;
+* ``metrics`` — a process-wide registry of counters/gauges/histograms with
+  JSON snapshot + Prometheus text export;
+* ``energy``  — per-request modeled-energy / measured-latency accounting of
+  the four paper objectives, per (format, objective, block);
+* ``aggregate`` — merges JSONL metric/trace shards from N server instances
+  into one fleet report; ``http`` serves ``/metrics`` + ``/healthz`` +
+  ``/obs`` from a daemon thread.
+
+``obs_enabled``/``set_obs_enabled`` gate the whole layer: disabled, a span
+is one attribute read and a metric mutation is one boolean check — the
+serving path's no-op fast path.
+"""
+
+from repro.obs.aggregate import merge_shards
+from repro.obs.energy import EnergyAccountant, EnergyCell
+from repro.obs.http import ObsHTTPServer
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_metrics,
+    reset_metrics,
+)
+from repro.obs.trace import (
+    Tracer,
+    get_tracer,
+    load_spans,
+    profile_capture,
+    span,
+)
+
+
+def set_obs_enabled(enabled: bool) -> None:
+    """Flip tracing + metrics on/off process-wide (the no-op fast path)."""
+    get_tracer().enabled = enabled
+    get_metrics().enabled = enabled
+
+
+def obs_enabled() -> bool:
+    return get_tracer().enabled or get_metrics().enabled
+
+
+__all__ = [
+    "Counter",
+    "EnergyAccountant",
+    "EnergyCell",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "ObsHTTPServer",
+    "Tracer",
+    "get_metrics",
+    "get_tracer",
+    "load_spans",
+    "merge_shards",
+    "obs_enabled",
+    "profile_capture",
+    "reset_metrics",
+    "set_obs_enabled",
+    "span",
+]

@@ -32,6 +32,7 @@ from repro.dist.sharding import SPMV_RULES, spec_for as sharding_spec, spmv_mesh
 from repro.kernels.common import DEFAULT_SCHEDULE, KernelSchedule, ceil_to, pad_axis
 from repro.kernels.ell import ell_spmv_pallas
 from repro.kernels.ops import PreparedSpmv, compile_spmv_block
+from repro.obs.trace import span as _span
 from repro.partition.partitioner import RowPartition
 from repro.partition.plan import CompositePlan
 from repro.sparse.registry import get_format
@@ -78,8 +79,14 @@ class PartitionedSpmv:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         x = jnp.asarray(x)
-        parts = [b.kernel(x) for b in self.blocks]
-        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        with _span(
+            "kernel.execute",
+            mode="partitioned",
+            n_blocks=self.n_blocks,
+            formats="+".join(self.formats),
+        ):
+            parts = [b.kernel(x) for b in self.blocks]
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
     def timed_call(
         self, x: jax.Array, *, warmup: bool = True
@@ -100,9 +107,10 @@ class PartitionedSpmv:
             self._warmed = True
         parts, times = [], []
         for b in self.blocks:
-            t0 = time.perf_counter()
-            y = jax.block_until_ready(b.kernel(x))
-            times.append(time.perf_counter() - t0)
+            with _span("kernel.execute", mode="block", block=b.index, fmt=b.fmt):
+                t0 = time.perf_counter()
+                y = jax.block_until_ready(b.kernel(x))
+                times.append(time.perf_counter() - t0)
             parts.append(np.asarray(y))
         return np.concatenate(parts), times
 
@@ -188,7 +196,13 @@ class FusedPartitionedSpmv:
         }
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        return self.kernel(x)
+        with _span(
+            "kernel.execute",
+            mode="fused",
+            n_blocks=self.n_blocks,
+            formats="+".join(self.formats),
+        ):
+            return self.kernel(x)
 
 
 def compile_fused_partitioned(

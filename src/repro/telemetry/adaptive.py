@@ -32,10 +32,17 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+from repro.obs.metrics import get_metrics
 from repro.utils.logging import get_logger
 from repro.utils.timing import RollingStats
 
 log = get_logger("telemetry.adaptive")
+
+# fleet-visible bandit economics: how many pulls left the incumbent, and how
+# often measurement overturned the model's plan
+_M_EXPLORE = get_metrics().counter("spmv_bandit_explore_total")
+_M_EXPLOIT = get_metrics().counter("spmv_bandit_exploit_total")
+_M_PROMOTIONS = get_metrics().counter("spmv_drift_promotions_total")
 
 CellKey = tuple[str, str]  # (bucket, objective)
 
@@ -201,6 +208,7 @@ class AdaptiveFormatSelector:
             cfg.exploration_fraction * (cell.total_pulls + 1), 1.0
         )
         if not budget_open and not self._arm(cell, cell.incumbent).disabled:
+            _M_EXPLOIT.inc()
             return cell.incumbent, False
         best_ref = None
         for fmt in candidates:
@@ -227,7 +235,9 @@ class AdaptiveFormatSelector:
                 best_fmt, best_score = fmt, score
         if best_fmt is None:  # everything disabled: serve the incumbent as-is
             best_fmt = cell.incumbent
-        return best_fmt, best_fmt != cell.incumbent
+        exploratory = best_fmt != cell.incumbent
+        (_M_EXPLORE if exploratory else _M_EXPLOIT).inc()
+        return best_fmt, exploratory
 
     # ----------------------------------------------------------------- update
     def update(
@@ -315,6 +325,7 @@ class AdaptiveFormatSelector:
         cell.drift_strikes = 0
         cell.exploration_pulls = 0
         cell.invalidations += 1
+        _M_PROMOTIONS.inc()
 
     # ---------------------------------------------------------------- queries
     def incumbent(self, bucket: str, objective: str) -> str | None:

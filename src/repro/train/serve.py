@@ -37,6 +37,11 @@ from repro.configs.base import ModelConfig
 from repro.core.session import AutoSpmvSession
 from repro.models import decode_step, prefill
 from repro.models.model import init_cache
+from repro.obs.energy import EnergyAccountant
+from repro.obs.http import ObsHTTPServer
+from repro.obs.metrics import get_metrics
+from repro.obs.trace import get_tracer, span as _span
+from repro.sparse.registry import default_format
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
@@ -194,6 +199,33 @@ class SpmvServer:
         self._served_since_calibration = 0
         self.batches_served = 0
         self.requests_served = 0
+        # observability: request counters + latency histograms live in the
+        # process metrics registry; modeled-energy accounting per cell
+        self.metrics = get_metrics()
+        self.energy = EnergyAccountant(self.metrics)
+        self._obs_http: ObsHTTPServer | None = None
+
+    def _account(
+        self,
+        objective: str,
+        fmt: str,
+        measured_s: float,
+        modeled: dict | None,
+        *,
+        block: str = "",
+    ) -> None:
+        """Fold one served execution into counters/histograms/energy cells."""
+        self.metrics.counter("spmv_requests_total", fmt=fmt, objective=objective).inc()
+        self.metrics.histogram(
+            "spmv_request_latency_seconds", objective=objective
+        ).observe(measured_s)
+        self.energy.observe(
+            fmt=fmt,
+            objective=objective,
+            measured_s=measured_s,
+            modeled=modeled,
+            block=block,
+        )
 
     def _run_observed(self, objective: str, group: list[SpmvRequest]) -> None:
         """Per-request serve + measure + observe (telemetry/adaptive mode).
@@ -202,17 +234,20 @@ class SpmvServer:
         here, so the batch dedup of ``optimize_many`` gives way to per-call
         timing; plan/kernel reuse still comes from the session caches."""
         for req in group:
-            plan = self.session.serve_optimize(req.dense, objective)
-            t0 = time.perf_counter()
-            y = np.asarray(plan.kernel(jnp.asarray(req.x)))
-            dt = time.perf_counter() - t0
-            req.y = y
-            req.schedule = plan.schedule
-            req.fmt = plan.fmt
-            req.cache_hit = plan.cache_hit
-            req.exploratory = plan.exploratory
-            req.latency_s = dt
-            self.session.observe(plan, dt)
+            with _span("server.request", rid=req.rid, objective=objective, mode="observed"):
+                plan = self.session.serve_optimize(req.dense, objective)
+                with _span("kernel.execute", fmt=plan.fmt):
+                    t0 = time.perf_counter()
+                    y = np.asarray(plan.kernel(jnp.asarray(req.x)))
+                    dt = time.perf_counter() - t0
+                req.y = y
+                req.schedule = plan.schedule
+                req.fmt = plan.fmt
+                req.cache_hit = plan.cache_hit
+                req.exploratory = plan.exploratory
+                req.latency_s = dt
+                self.session.observe(plan, dt)
+                self._account(objective, plan.fmt, dt, plan.predicted)
         if self.feedback is not None:
             refit = self.feedback.maybe_refit(self.session.tuner.predictor)
             if refit:
@@ -226,27 +261,41 @@ class SpmvServer:
         for measurements nothing would consume."""
         for req in group:
             x = jnp.asarray(req.x)
-            if self.adaptive:
-                res = self.session.serve_partitioned(
-                    req.dense, objective, max_blocks=self.max_blocks
-                )
-                y, block_times = res.kernel.timed_call(x)
-                dt = sum(block_times)
-                self.session.observe_partitioned(res, block_times)
-            else:
-                res = self.session.partitioned_optimize(
-                    req.dense, objective, max_blocks=self.max_blocks,
-                    fused=self.fused,
-                )
-                t0 = time.perf_counter()
-                y = np.asarray(jax.block_until_ready(res.kernel(x)))
-                dt = time.perf_counter() - t0
-            req.y = y
-            req.schedule = res.plan.blocks[0].schedule
-            req.fmt = "+".join(res.formats)
-            req.cache_hit = res.cache_hit
-            req.exploratory = any(res.exploratory)
-            req.latency_s = dt
+            with _span(
+                "server.request", rid=req.rid, objective=objective, mode="partitioned"
+            ):
+                if self.adaptive:
+                    res = self.session.serve_partitioned(
+                        req.dense, objective, max_blocks=self.max_blocks
+                    )
+                    y, block_times = res.kernel.timed_call(x)
+                    dt = sum(block_times)
+                    self.session.observe_partitioned(res, block_times)
+                    # per-block energy attribution: each row block's modeled
+                    # estimate against its own measured slice
+                    for bp, fmt, bt in zip(res.plan.blocks, res.formats, block_times):
+                        self.energy.observe(
+                            fmt=fmt,
+                            objective=objective,
+                            measured_s=bt,
+                            modeled=bp.modeled.as_dict(),
+                            block=str(bp.block.index),
+                        )
+                else:
+                    res = self.session.partitioned_optimize(
+                        req.dense, objective, max_blocks=self.max_blocks,
+                        fused=self.fused,
+                    )
+                    t0 = time.perf_counter()
+                    y = np.asarray(jax.block_until_ready(res.kernel(x)))
+                    dt = time.perf_counter() - t0
+                req.y = y
+                req.schedule = res.plan.blocks[0].schedule
+                req.fmt = "+".join(res.formats)
+                req.cache_hit = res.cache_hit
+                req.exploratory = any(res.exploratory)
+                req.latency_s = dt
+                self._account(objective, req.fmt, dt, res.plan.modeled.as_dict())
         if self.feedback is not None:
             refit = self.feedback.maybe_refit(self.session.tuner.predictor)
             if refit:
@@ -271,13 +320,22 @@ class SpmvServer:
                 [r.dense for r in group], objective, mode="compile"
             )
             for req, res in zip(group, results):
-                req.schedule = res.schedule
-                req.y = np.asarray(res.kernel(jnp.asarray(req.x)))
-                # a request is a hit if its plan existed before the batch OR
-                # was produced for an earlier request in this batch
-                key = self.session.plan_key(res.features, objective)
-                req.cache_hit = key in seen_keys
-                seen_keys.add(key)
+                with _span(
+                    "server.request", rid=req.rid, objective=objective, mode="batch"
+                ):
+                    req.schedule = res.schedule
+                    with _span("kernel.execute", fmt=default_format()):
+                        t_exec = time.perf_counter()
+                        req.y = np.asarray(res.kernel(jnp.asarray(req.x)))
+                        exec_s = time.perf_counter() - t_exec
+                    # a request is a hit if its plan existed before the batch
+                    # OR was produced for an earlier request in this batch
+                    key = self.session.plan_key(res.features, objective)
+                    req.cache_hit = key in seen_keys
+                    seen_keys.add(key)
+                    self._account(
+                        objective, default_format(), exec_s, res.predicted
+                    )
             # latency covers this group's tuning + execution only, not other
             # objective groups tuned later in the same batch
             dt = time.perf_counter() - t_group
@@ -318,4 +376,61 @@ class SpmvServer:
             out["refits"] = self.feedback.refits
         if self.calibrate_every > 0:
             out["calibrations"] = self.calibrations
+        latency: dict[str, dict] = {}
+        for hist in self.metrics.instruments("histogram", "spmv_request_latency_seconds"):
+            if not hist.count:
+                continue
+            labels = dict(hist.labels)
+            latency[labels.get("objective", "")] = hist.as_dict()
+        if latency:
+            out["latency"] = latency
+        energy = self.energy.per_format()
+        if energy:
+            out["energy"] = {f: c.as_dict() for f, c in sorted(energy.items())}
         return out
+
+    # --------------------------------------------------------- observability
+    def dump_obs(
+        self, out_dir, *, instance: str = "server"
+    ) -> dict[str, str]:
+        """Export this instance's observability shards (fleet aggregation
+        input): a metrics JSONL shard, a trace JSONL shard, and the summary
+        (with energy/latency aggregates) as JSON. Returns path strings."""
+        import json
+        from pathlib import Path
+
+        from repro.utils.io import atomic_write_text
+
+        out_dir = Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        metrics_path = out_dir / f"metrics-{instance}.jsonl"
+        trace_path = out_dir / f"trace-{instance}.jsonl"
+        summary_path = out_dir / f"summary-{instance}.json"
+        self.metrics.write_shard(metrics_path, instance)
+        get_tracer().export_jsonl(trace_path)
+        atomic_write_text(
+            summary_path, json.dumps(self.summary(), indent=1, default=float)
+        )
+        log.info("observability shards -> %s", out_dir)
+        return {
+            "metrics": str(metrics_path),
+            "trace": str(trace_path),
+            "summary": str(summary_path),
+        }
+
+    def start_metrics_server(
+        self, port: int = 0, *, host: str = "127.0.0.1"
+    ) -> ObsHTTPServer:
+        """Serve ``/metrics`` + ``/healthz`` + ``/obs`` from a daemon thread."""
+        if self._obs_http is None:
+            self._obs_http = ObsHTTPServer(
+                self.metrics, extra=self.summary, host=host, port=port
+            )
+            self._obs_http.start()
+            log.info("metrics endpoint at %s/metrics", self._obs_http.url)
+        return self._obs_http
+
+    def stop_metrics_server(self) -> None:
+        if self._obs_http is not None:
+            self._obs_http.stop()
+            self._obs_http = None

@@ -539,3 +539,49 @@ def test_spmv_server_plain_mode_unchanged():
     done = server.run(reqs)
     assert all(r.y is not None and r.fmt is None for r in done)
     assert session.stats.observations == 0
+
+
+def test_spmv_server_summary_latency_and_energy():
+    """summary() surfaces p50/p90/p99 request latency per objective and the
+    per-format energy/power accounting (PR-7 observability satellite)."""
+    from repro.obs import set_obs_enabled
+    from repro.obs.metrics import reset_metrics
+    from repro.obs.trace import get_tracer
+    from repro.train.serve import SpmvRequest, SpmvServer
+
+    set_obs_enabled(True)
+    reset_metrics()
+    get_tracer().clear()
+    try:
+        sel = AdaptiveFormatSelector(AdaptiveConfig(exploration_fraction=0.0))
+        session = AutoSpmvSession(
+            _fake_tuner(), telemetry=TelemetryRecorder(), adaptive=sel
+        )
+        server = SpmvServer(session)
+        rng = np.random.default_rng(2)
+        m = _mat()
+        reqs = [
+            SpmvRequest(rid=i, dense=m,
+                        x=rng.normal(size=m.shape[1]).astype(np.float32))
+            for i in range(5)
+        ]
+        server.run(reqs)
+
+        s = server.summary()
+        lat = s["latency"]["latency"]  # keyed by objective
+        assert lat["count"] == len(reqs)
+        assert 0 < lat["p50"] <= lat["p90"] <= lat["p99"]
+        assert lat["sum"] >= lat["count"] * lat["p50"] * 0.1  # sane magnitudes
+
+        assert s["energy"], "per-format energy cells missing"
+        for fmt, cell in s["energy"].items():
+            assert fmt in FORMATS
+            assert cell["requests"] > 0
+            assert cell["energy_j"] >= 0
+            assert cell["avg_power_w"] >= 0
+            assert cell["efficiency_mflops_per_w"] >= 0
+        # modeled objectives flowed through: the served format carries energy
+        assert sum(c["requests"] for c in s["energy"].values()) == len(reqs)
+    finally:
+        reset_metrics()
+        get_tracer().clear()
