@@ -42,6 +42,7 @@ BENCHES = [
     ("session_cache", "benchmarks.bench_session_cache", "Session cache cold vs warm"),
     ("adaptive", "benchmarks.bench_adaptive", "Telemetry bandit misprediction recovery"),
     ("partition", "benchmarks.bench_partition", "Partitioned vs monolithic SpMV"),
+    ("solvers", "benchmarks.bench_solvers", "Iterative solvers + adaptive SpMSpV"),
     ("fig12", "benchmarks.fig12_sensitivity", "Fig.12 hardware sensitivity"),
     ("roofline", "benchmarks.roofline", "Roofline report (dry-run artifacts)"),
     # keep last: activates the bcsr plugin, which widens the registry for the
@@ -49,7 +50,7 @@ BENCHES = [
     ("formats", "benchmarks.bench_formats", "Registered-format sweep incl. bcsr plugin"),
 ]
 
-SMOKE_BENCHES = ("session_cache", "adaptive", "partition", "formats")
+SMOKE_BENCHES = ("session_cache", "adaptive", "partition", "solvers", "formats")
 
 _MAX_METRICS = 400  # per bench: keep the artifact readable, not exhaustive
 

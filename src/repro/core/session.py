@@ -50,6 +50,7 @@ from repro.core.cache import CacheEntry, TuningCache
 from repro.core.features import SparsityFeatures, extract_features
 from repro.kernels.common import DEFAULT_SCHEDULE, KernelSchedule
 from repro.kernels.ops import (
+    compile_spmspv as _compile_spmspv_kernel,
     compile_spmv,
     kernel_memo_stats,
     kernel_memoized,
@@ -267,6 +268,24 @@ class AutoSpmvSession:
         )
         self.stats.kernel_compiles += kernel_memo_stats()["compiles"] - before
         return kernel
+
+    def compile_spmspv(
+        self, dense: np.ndarray, schedule: KernelSchedule = DEFAULT_SCHEDULE
+    ):
+        """Session-accounted SpMSpV compilation (sparse-frontier twin path).
+
+        Shares the matrix fingerprint (and thus the process kernel memo)
+        with the SpMV plans for the same matrix, and books any real
+        conversion into ``stats.kernel_compiles`` — so an iterative solver
+        that lazily adds the SpMSpV path still shows up as exactly one
+        extra compile in the amortization counters."""
+        fp, _, _ = self._analyze(dense)
+        before = kernel_memo_stats()["compiles"]
+        prepared = _compile_spmspv_kernel(
+            dense, schedule, interpret=self.tuner.interpret, memo_key=fp
+        )
+        self.stats.kernel_compiles += kernel_memo_stats()["compiles"] - before
+        return prepared
 
     def plan_key(
         self,

@@ -14,8 +14,10 @@ from repro.kernels.common import (
 )
 from repro.kernels.ops import (
     InfeasibleConfig,
+    PreparedSpmspv,
     PreparedSpmv,
     clear_kernel_memo,
+    compile_spmspv,
     compile_spmv,
     kernel_memo_limit,
     kernel_memo_size,
@@ -25,6 +27,7 @@ from repro.kernels.ops import (
     prepare,
     set_kernel_memo_limit,
     spmm_pallas,
+    spmspv,
     spmv_pallas,
 )
 
@@ -37,8 +40,10 @@ __all__ = [
     "ACCUM_DTYPE_CHOICES",
     "X_RESIDENCY_CHOICES",
     "InfeasibleConfig",
+    "PreparedSpmspv",
     "PreparedSpmv",
     "clear_kernel_memo",
+    "compile_spmspv",
     "compile_spmv",
     "kernel_memo_limit",
     "kernel_memo_size",
@@ -48,5 +53,6 @@ __all__ = [
     "prepare",
     "set_kernel_memo_limit",
     "spmm_pallas",
+    "spmspv",
     "spmv_pallas",
 ]

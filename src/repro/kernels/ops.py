@@ -92,6 +92,26 @@ def spmm_pallas(
     ]
 
 
+def spmspv(
+    mat,
+    active: np.ndarray,
+    xvals: np.ndarray,
+    schedule: KernelSchedule = DEFAULT_SCHEDULE,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sparse-input-vector SpMV over a ``CscEll`` container.
+
+    ``active`` holds the frontier's column indices and ``xvals`` the
+    corresponding x values; work scales with the frontier's column nnz,
+    not nnz(A). See ``repro.kernels.spmspv`` for the kernel design."""
+    from repro.kernels.spmspv import CscEll, csc_spmspv
+
+    if not isinstance(mat, CscEll):
+        raise TypeError("spmspv expects a CscEll container (see prepare_spmspv)")
+    return csc_spmspv(mat, active, xvals, schedule, interpret=interpret)
+
+
 @dataclass(frozen=True)
 class PreparedSpmv:
     """A (format, schedule)-specialized SpMV — what compile-time mode emits."""
@@ -312,3 +332,81 @@ def compile_spmv_fused(
             _MEMO_STATS["evictions"] += 1
             _M_EVICTIONS.inc()
     return kernel
+
+
+_SPMSPV_TAG = "spmspv"
+
+
+@dataclass(frozen=True)
+class PreparedSpmspv:
+    """A schedule-specialized SpMSpV — the sparse-frontier twin of
+    ``PreparedSpmv``.
+
+    Holds the column-slice storage plus the host-side per-column nnz
+    vector, so the adaptive policy can price a frontier
+    (``modeled_work``) without touching device memory.
+    """
+
+    mat: Any  # repro.kernels.spmspv.CscEll
+    schedule: KernelSchedule
+    interpret: bool = True
+    col_nnz: Any = None  # np.ndarray (n_cols,) int64
+
+    def call_frontier(self, active: np.ndarray, xvals: np.ndarray) -> jax.Array:
+        return spmspv(
+            self.mat, active, xvals, self.schedule, interpret=self.interpret
+        )
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Dense-in/dense-out convenience: extracts the frontier host-side."""
+        xh = np.asarray(x)
+        active = np.flatnonzero(xh).astype(np.int32)
+        return self.call_frontier(active, xh[active])
+
+    def modeled_work(self, active: np.ndarray) -> int:
+        """Stored nonzeros this frontier touches — the SpMSpV cost model."""
+        if self.col_nnz is None:
+            return 0
+        return int(np.asarray(self.col_nnz)[np.asarray(active, dtype=np.int64)].sum())
+
+
+def compile_spmspv(
+    dense: np.ndarray,
+    schedule: KernelSchedule = DEFAULT_SCHEDULE,
+    *,
+    interpret: bool = True,
+    memo_key: Hashable | None = None,
+) -> PreparedSpmspv:
+    """prepare + bind the sparse-input-vector path.
+
+    Memoizes alongside the SpMV kernels with the ``"spmspv"`` tag in the
+    format slot — one extra entry per (matrix, schedule), subject to the
+    same LRU bound and counters, so an iterative solve that uses both
+    paths pays each conversion once."""
+    from repro.kernels.spmspv import col_nnz as _col_nnz
+    from repro.kernels.spmspv import csc_from_dense
+
+    if memo_key is not None:
+        key = (memo_key, _SPMSPV_TAG, schedule, interpret)
+        hit = _KERNEL_MEMO.get(key)
+        if hit is not None:
+            _MEMO_STATS["hits"] += 1
+            _M_HITS.inc()
+            _KERNEL_MEMO.move_to_end(key)
+            return hit
+    with _span("kernel.compile", fmt=_SPMSPV_TAG):
+        prepared = PreparedSpmspv(
+            csc_from_dense(dense, schedule),
+            schedule,
+            interpret,
+            _col_nnz(dense),
+        )
+    if memo_key is not None:
+        _MEMO_STATS["compiles"] += 1
+        _M_COMPILES.inc()
+        _KERNEL_MEMO[key] = prepared
+        while len(_KERNEL_MEMO) > _MEMO_LIMIT:
+            _KERNEL_MEMO.popitem(last=False)
+            _MEMO_STATS["evictions"] += 1
+            _M_EVICTIONS.inc()
+    return prepared

@@ -65,12 +65,21 @@ _SUITE_RAW = [
     ("eu-2005", 862_664, 19_235_140, "powerlaw"),
 ]
 
+# Post-Table-7 extensions: in SUITE (name-addressable everywhere) but NOT in
+# MATRIX_NAMES, which stays the paper's exact 30-matrix §6.1 selection used
+# for dataset collection. Append-only — seeds are positional and must not
+# shift for either list.
+_EXTRA_RAW = [
+    # web adjacency for the PageRank/power-iteration solver workload
+    ("webgraph", 875_713, 5_105_039, "webgraph"),
+]
+
 SUITE: dict[str, MatrixSpec] = {
     name: MatrixSpec(name, n, nnz, pattern, seed=i + 1)
-    for i, (name, n, nnz, pattern) in enumerate(_SUITE_RAW)
+    for i, (name, n, nnz, pattern) in enumerate(_SUITE_RAW + _EXTRA_RAW)
 }
 
-MATRIX_NAMES = tuple(SUITE)
+MATRIX_NAMES = tuple(name for name, *_ in _SUITE_RAW)
 
 
 def _scatter(n_rows: int, n_cols: int, rows: np.ndarray, cols: np.ndarray, rng) -> np.ndarray:
@@ -165,6 +174,40 @@ def _gen_denserows(n: int, avg: float, rng) -> np.ndarray:
     return _scatter(n, n, rows, cols, rng)
 
 
+def _gen_webgraph(n: int, avg: float, rng) -> np.ndarray:
+    # directed web adjacency A[i, j] = weight of link j -> i (column j holds
+    # node j's out-edges, the orientation PageRank multiplies): power-law
+    # out-degrees with preferential attachment on the targets (hub *rows*),
+    # plus ~2% dangling nodes (all-zero columns) so the solver's
+    # dangling-mass redistribution is actually exercised
+    raw = rng.zipf(1.9, size=n).astype(np.float64)
+    out_deg = np.clip(raw * (avg / raw.mean()), 1, n // 2).astype(np.int64)
+    dangling = rng.random(n) < 0.02
+    out_deg[dangling] = 0
+    cols = _row_major_expand(out_deg)  # source node per edge
+    # preferential attachment: half the edges land on zipf-ranked hub
+    # targets, half uniformly (keeps the graph connected enough to mix)
+    n_edges = cols.size
+    hub = rng.random(n_edges) < 0.5
+    hub_targets = np.minimum(rng.zipf(1.5, size=n_edges) - 1, n - 1)
+    uni_targets = rng.integers(0, n, size=n_edges)
+    rows = np.where(hub, hub_targets, uni_targets).astype(np.int64)
+    off_diag = rows != cols  # no self-links
+    return _scatter(n, n, rows[off_diag], cols[off_diag], rng)
+
+
+def normalize_columns(dense: np.ndarray) -> np.ndarray:
+    """Column-stochastic normalization: each nonzero column sums to 1.
+
+    Zero columns (dangling nodes) are left zero — PageRank's recurrence
+    redistributes their mass explicitly, so the operator must keep them
+    visible rather than papering over them with a uniform column."""
+    dense = np.asarray(dense, dtype=np.float32)
+    sums = dense.sum(axis=0)
+    safe = np.where(sums > 0, sums, 1.0)
+    return dense / safe[None, :]
+
+
 def _gen_bipartite(n: int, avg: float, rng) -> np.ndarray:
     # constant-degree structured stencil (simplicial boundary operator-like)
     k = max(int(avg), 1)
@@ -184,6 +227,7 @@ _PATTERNS = {
     "denseband": _gen_denseband,
     "denserows": _gen_denserows,
     "bipartite": _gen_bipartite,
+    "webgraph": _gen_webgraph,
 }
 
 PATTERN_NAMES = tuple(_PATTERNS)

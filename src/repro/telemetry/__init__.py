@@ -25,6 +25,7 @@ from repro.telemetry.adaptive import (
     ArmState,
     CellState,
     block_arm_bucket,
+    phase_arm_bucket,
 )
 from repro.telemetry.feedback import (
     FeedbackConfig,
@@ -48,5 +49,6 @@ __all__ = [
     "MeasurementRecord",
     "TelemetryRecorder",
     "block_arm_bucket",
+    "phase_arm_bucket",
     "telemetry_records",
 ]

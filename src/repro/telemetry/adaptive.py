@@ -61,6 +61,20 @@ def block_arm_bucket(bucket: str, index: int, n_blocks: int) -> str:
     return f"{bucket}#blk{index}of{n_blocks}"
 
 
+def phase_arm_bucket(bucket: str, phase: int, n_phases: int) -> str:
+    """Bandit cell key for one frontier-density phase of an iterative solve.
+
+    The SpMV↔SpMSpV policy (``repro.solvers.adaptive``) bins each
+    iteration by input-vector density and treats the two execution paths
+    as arms *within that phase*: a webgraph family can learn that phase 0
+    (frontier under 2% dense) belongs to SpMSpV while phase 5 (near-dense)
+    belongs to SpMV, with the crossover point emerging from measurements
+    instead of a hardcoded threshold. ``n_phases`` is part of the key for
+    the same reason as ``block_arm_bucket``'s ``n_blocks``: re-binning the
+    density axis changes what each phase measures."""
+    return f"{bucket}#ph{phase}of{n_phases}"
+
+
 @dataclass
 class AdaptiveConfig:
     exploration_bonus: float = 0.5  # UCB width, in units of the best arm's mean

@@ -1,0 +1,182 @@
+"""Tests for the SpMSpV kernel path (kernels/spmspv.py + ops wiring):
+exactness against the dense reference for any frontier occupancy, padding
+and spill conventions, schedule variants (unroll, bf16), misalignment and
+bounds behavior, and the process-memo integration of ``compile_spmspv``."""
+
+import numpy as np
+import pytest
+
+import repro.sparse.registry as registry
+from repro.kernels.common import DEFAULT_SCHEDULE, InfeasibleConfig, KernelSchedule
+from repro.kernels.ops import (
+    PreparedSpmspv,
+    compile_spmspv,
+    kernel_memo_stats,
+    matrix_fingerprint,
+    spmspv,
+)
+from repro.kernels.spmspv import (
+    CscEll,
+    _frontier_pad,
+    col_nnz,
+    csc_from_dense,
+    csc_spmspv,
+)
+from repro.sparse.generate import random_matrix
+
+
+def _matrix(n=96, avg=5.0, pattern="powerlaw", seed=0):
+    return random_matrix(n, avg, pattern, seed=seed).astype(np.float32)
+
+
+def _frontier(rng, n, k):
+    active = rng.choice(n, size=k, replace=False).astype(np.int32) if k else (
+        np.zeros(0, dtype=np.int32)
+    )
+    xvals = rng.standard_normal(k).astype(np.float32)
+    return active, xvals
+
+
+def _dense_ref(dense, active, xvals):
+    x = np.zeros(dense.shape[1], dtype=np.float64)
+    x[active] = xvals.astype(np.float64)
+    return dense.astype(np.float64) @ x
+
+
+# ----------------------------------------------------------------- exactness
+@pytest.mark.parametrize("occupancy", ["empty", "singleton", "half", "full"])
+@pytest.mark.parametrize("pattern", ["powerlaw", "fem", "webgraph"])
+def test_exact_vs_dense(occupancy, pattern):
+    dense = _matrix(pattern=pattern, seed=3)
+    n = dense.shape[1]
+    k = {"empty": 0, "singleton": 1, "half": n // 2, "full": n}[occupancy]
+    rng = np.random.default_rng(k)
+    active, xvals = _frontier(rng, n, k)
+    mat = csc_from_dense(dense)
+    y = np.asarray(csc_spmspv(mat, active, xvals))
+    assert y.shape == (dense.shape[0],)
+    np.testing.assert_allclose(y, _dense_ref(dense, active, xvals),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_unsorted_and_duplicate_free_frontier_order_irrelevant():
+    dense = _matrix(seed=5)
+    rng = np.random.default_rng(7)
+    active, xvals = _frontier(rng, dense.shape[1], 17)
+    mat = csc_from_dense(dense)
+    y_fwd = np.asarray(csc_spmspv(mat, active, xvals))
+    y_rev = np.asarray(csc_spmspv(mat, active[::-1], xvals[::-1]))
+    np.testing.assert_allclose(y_fwd, y_rev, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("unroll", [2, 4])
+def test_unroll_variants(unroll):
+    sched = KernelSchedule(unroll=unroll)
+    dense = _matrix(seed=11)
+    rng = np.random.default_rng(0)
+    active, xvals = _frontier(rng, dense.shape[1], 23)
+    mat = csc_from_dense(dense, sched)
+    y = np.asarray(csc_spmspv(mat, active, xvals, sched))
+    np.testing.assert_allclose(y, _dense_ref(dense, active, xvals),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_accumulation_loose_tolerance():
+    sched = KernelSchedule(accum_dtype="bfloat16")
+    dense = _matrix(seed=13)
+    rng = np.random.default_rng(1)
+    active, xvals = _frontier(rng, dense.shape[1], 31)
+    mat = csc_from_dense(dense, sched)
+    y = np.asarray(csc_spmspv(mat, active, xvals, sched))
+    ref = _dense_ref(dense, active, xvals)
+    scale = np.abs(ref).max() + 1e-9
+    assert np.abs(y - ref).max() / scale < 5e-2
+
+
+# ----------------------------------------------------- storage + conventions
+def test_cscell_spill_column_and_width_alignment():
+    dense = _matrix(seed=17)
+    sched = DEFAULT_SCHEDULE
+    mat = csc_from_dense(dense, sched)
+    n_rows, n_cols = mat.shape
+    assert mat.data.shape == (n_cols + 1, mat.width)
+    assert mat.width % sched.nnz_tile == 0
+    # spill column (frontier padding target) holds exact zeros / spill rows
+    assert np.all(np.asarray(mat.data[n_cols]) == 0)
+    assert np.all(np.asarray(mat.rows[n_cols]) == n_rows)
+    # padding slots inside real columns also point at the spill row
+    counts = col_nnz(dense)
+    rows_np = np.asarray(mat.rows)
+    for c in (0, n_cols // 2, n_cols - 1):
+        assert np.all(rows_np[c, int(counts[c]):] == n_rows)
+
+
+def test_frontier_pad_is_pow2_min_sublane():
+    assert _frontier_pad(1) == 8
+    assert _frontier_pad(8) == 8
+    assert _frontier_pad(9) == 16
+    assert _frontier_pad(100) == 128
+
+
+def test_misaligned_schedule_raises_infeasible():
+    dense = _matrix(seed=19)
+    mat = csc_from_dense(dense, KernelSchedule(nnz_tile=128))
+    wider = KernelSchedule(nnz_tile=256)
+    if mat.width % wider.nnz_tile == 0:
+        pytest.skip("width happens to align; misalignment not constructible")
+    with pytest.raises(InfeasibleConfig):
+        csc_spmspv(mat, np.array([0], np.int32), np.array([1.0], np.float32), wider)
+
+
+def test_storage_bound_rejects_blowup(monkeypatch):
+    monkeypatch.setattr(registry, "MAX_STORAGE_BYTES", 1024)
+    with pytest.raises(InfeasibleConfig):
+        csc_from_dense(_matrix(seed=23))
+
+
+def test_frontier_validation():
+    dense = _matrix(seed=29)
+    mat = csc_from_dense(dense)
+    with pytest.raises(ValueError):
+        csc_spmspv(mat, np.array([dense.shape[1]], np.int32),
+                   np.array([1.0], np.float32))
+    with pytest.raises(ValueError):
+        csc_spmspv(mat, np.array([0, 1], np.int32), np.array([1.0], np.float32))
+
+
+# ------------------------------------------------------------- ops.py wiring
+def test_spmspv_entry_requires_cscell():
+    with pytest.raises(TypeError):
+        spmspv(object(), np.zeros(0, np.int32), np.zeros(0, np.float32))
+
+
+def test_compile_spmspv_memoizes_and_counts():
+    dense = _matrix(seed=31)
+    fp = matrix_fingerprint(dense)
+    before = kernel_memo_stats()
+    p1 = compile_spmspv(dense, memo_key=fp)
+    p2 = compile_spmspv(dense, memo_key=fp)
+    after = kernel_memo_stats()
+    assert p1 is p2
+    assert after["compiles"] - before["compiles"] == 1
+    assert after["hits"] - before["hits"] == 1
+    # a different schedule is a different memo entry, not a collision
+    p3 = compile_spmspv(dense, KernelSchedule(unroll=2), memo_key=fp)
+    assert p3 is not p1
+
+
+def test_prepared_spmspv_dense_call_and_modeled_work():
+    dense = _matrix(seed=37)
+    prepared = compile_spmspv(dense)
+    assert isinstance(prepared, PreparedSpmspv)
+    rng = np.random.default_rng(4)
+    x = np.zeros(dense.shape[1], dtype=np.float32)
+    active = rng.choice(dense.shape[1], size=13, replace=False)
+    x[active] = rng.standard_normal(13).astype(np.float32)
+    y = np.asarray(prepared(x))
+    np.testing.assert_allclose(
+        y, dense.astype(np.float64) @ x.astype(np.float64), rtol=1e-5, atol=1e-5
+    )
+    work = prepared.modeled_work(np.sort(active))
+    assert work == int(col_nnz(dense)[np.sort(active)].sum())
+    assert 0 < work <= int((dense != 0).sum())
