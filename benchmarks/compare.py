@@ -82,6 +82,18 @@ GATES = (
         # side — only a structural slowdown pushes it past this
         max_ok_ratio=1.25,
     ),
+    RatioGate(
+        name="lm_sparse_per_token",
+        bench="sparse_lm",
+        num_key="sparse/per_token_s",
+        den_key="dense/per_token_s",
+        # sparse-served decode over dense decode on the same pruned params
+        # (both warmed). The shared dense prefill dominates these tiny serving
+        # runs, so the ratio measured on this container hovers near 1.0; the
+        # guard bounds a structural blowup of the SpMV route (e.g. plans
+        # recomputed per tick), not interpret-mode jitter
+        max_ok_ratio=3.0,
+    ),
 )
 
 

@@ -43,6 +43,7 @@ BENCHES = [
     ("adaptive", "benchmarks.bench_adaptive", "Telemetry bandit misprediction recovery"),
     ("partition", "benchmarks.bench_partition", "Partitioned vs monolithic SpMV"),
     ("solvers", "benchmarks.bench_solvers", "Iterative solvers + adaptive SpMSpV"),
+    ("sparse_lm", "benchmarks.bench_sparse_lm", "Sparse LM serving vs dense decode"),
     ("fig12", "benchmarks.fig12_sensitivity", "Fig.12 hardware sensitivity"),
     ("roofline", "benchmarks.roofline", "Roofline report (dry-run artifacts)"),
     # keep last: activates the bcsr plugin, which widens the registry for the
@@ -50,7 +51,9 @@ BENCHES = [
     ("formats", "benchmarks.bench_formats", "Registered-format sweep incl. bcsr plugin"),
 ]
 
-SMOKE_BENCHES = ("session_cache", "adaptive", "partition", "solvers", "formats")
+SMOKE_BENCHES = (
+    "session_cache", "adaptive", "partition", "solvers", "sparse_lm", "formats"
+)
 
 _MAX_METRICS = 400  # per bench: keep the artifact readable, not exhaustive
 

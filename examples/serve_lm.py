@@ -3,6 +3,13 @@ small model with KV/state caches.
 
   PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b \
       --requests 6 --slots 3
+
+``--sparse`` magnitude-prunes the FFN weights and serves their matmuls
+through session-planned SpMV kernels (the Auto-SpMV sparse-serving path):
+it first runs a one-step dense-vs-sparse numerics check on the same pruned
+params, then serves the request stream with per-request SLO classes.
+
+  PYTHONPATH=src python examples/serve_lm.py --sparse --requests 2 --slots 1
 """
 
 import argparse
@@ -12,11 +19,50 @@ import time
 sys.path.insert(0, "src")
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import init_params, model_specs
 from repro.train.serve import BatchedServer, Request, ServeConfig
+
+
+def build_sparse_engine(cfg, params, density):
+    """Cheap tuner + shared session + engine over the pruned FFN weights."""
+    from repro.core.session import AutoSpmvSession, build_tuner
+    from repro.models.sparse_linear import SparseInferenceEngine, prune_model_ffns
+    from repro.sparse.generate import MATRIX_NAMES
+
+    tuner = build_tuner(
+        scale=0.0008, names=MATRIX_NAMES[:3], n_extra=0, fit_overhead=False
+    )
+    engine = SparseInferenceEngine(AutoSpmvSession(tuner))
+    pruned = prune_model_ffns(params, cfg, engine, density=density)
+    return engine, pruned
+
+
+def check_numerics(cfg, params, engine):
+    """One decode step, dense vs sparse-served, on the SAME pruned params:
+    the SpMV route must reproduce the dense logits within fp32 tolerance."""
+    from repro.models.model import decode_step, init_cache, prefill
+
+    B, T = 1, 6
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (B, T)), jnp.int32
+    )
+    cache = init_cache(cfg, B, 64)
+    logits, cache, _ = prefill(params, cfg, cache, tokens=tokens)
+    nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    pos = jnp.full((B, 1), T, jnp.int32)
+    ld, _ = decode_step(params, cfg, cache, nxt, pos)
+    engine.plan_all("latency")
+    ls, _ = decode_step(
+        params, cfg, cache, nxt, pos,
+        unroll_layers=True, engine=engine.bind("latency"),
+    )
+    err = float(jnp.max(jnp.abs(ld - ls)))
+    print(f"dense-vs-sparse decode logits: max abs diff {err:.2e}")
+    assert err < 5e-4, f"sparse-served logits diverged from dense: {err}"
 
 
 def main():
@@ -26,24 +72,42 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new-tokens", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sparse", action="store_true",
+                    help="serve FFN matmuls through planned SpMV kernels")
+    ap.add_argument("--density", type=float, default=0.05,
+                    help="with --sparse: kept-weight fraction per FFN matrix")
+    ap.add_argument("--slo", default="mixed",
+                    choices=["latency-critical", "power-capped", "balanced",
+                             "energy-saving", "mixed"])
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced_config=True)
     if cfg.prefix_len:
         cfg = cfg.replace(prefix_len=0, prefix_lm=False)  # text-only demo
+    if args.sparse and cfg.n_experts and cfg.dispatch_format != "dense":
+        cfg = cfg.replace(dispatch_format="dense")  # engine needs dense dispatch
     print(f"serving {cfg.name}: {cfg.param_counts()['total']/1e6:.1f}M params, "
           f"{args.slots} slots")
     params = init_params(model_specs(cfg), jax.random.PRNGKey(args.seed), cfg.param_dtype)
+    engine = None
+    if args.sparse:
+        engine, params = build_sparse_engine(cfg, params, args.density)
+        print(f"sparse engine: {engine.stats.registered} FFN matrices pruned to "
+              f"density {args.density} ({engine.stats.spmv_layers} SpMV-eligible)")
+        check_numerics(cfg, params, engine)
     server = BatchedServer(
         params, cfg,
         ServeConfig(batch_slots=args.slots, max_len=256,
                     max_new_tokens=args.max_new_tokens),
+        engine=engine,
     )
     rng = np.random.default_rng(args.seed)
+    slos = ["latency-critical", "power-capped", "balanced", "energy-saving"]
     reqs = [
         Request(rid=i,
                 prompt=rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 20))).tolist(),
-                max_new_tokens=args.max_new_tokens)
+                max_new_tokens=args.max_new_tokens,
+                slo=slos[i % len(slos)] if args.slo == "mixed" else args.slo)
         for i in range(args.requests)
     ]
     t0 = time.time()
@@ -51,9 +115,16 @@ def main():
     dt = time.time() - t0
     total = sum(len(r.generated) for r in done)
     for r in done:
-        print(f"  req {r.rid}: {len(r.prompt)}-token prompt -> {r.generated[:8]}...")
+        print(f"  req {r.rid} [{r.slo}]: {len(r.prompt)}-token prompt -> "
+              f"{r.generated[:8]}...")
     print(f"{total} tokens in {dt:.1f}s ({total/dt:.1f} tok/s aggregate, "
           f"{args.slots}-way batched)")
+    if engine is not None:
+        s = server.summary()
+        print(f"slo classes: {s['slo_classes']}")
+        print(f"engine plans: {s['engine']['stats']['plans']} "
+              f"({s['session']['requests']} session plan requests)")
+        print(f"energy cells: {sorted(s.get('energy', {}))}")
 
 
 if __name__ == "__main__":

@@ -50,15 +50,46 @@ from repro.utils.logging import get_logger
 log = get_logger("launch.serve")
 
 
+def _build_lm_engine(args, cfg, params):
+    """Stand up the sparse serving stack: a cheap tuner + shared session +
+    one ``SparseInferenceEngine`` holding the magnitude-pruned FFN weights.
+    Returns (engine, pruned params)."""
+    from repro.models.sparse_linear import SparseInferenceEngine, prune_model_ffns
+
+    t0 = time.time()
+    tuner = build_tuner(
+        scale=0.0008, names=MATRIX_NAMES[:4], n_extra=0, fit_overhead=False
+    )
+    log.info("lm-sparse tuner ready in %.1fs", time.time() - t0)
+    session = AutoSpmvSession(tuner)
+    engine = SparseInferenceEngine(session)
+    pruned = prune_model_ffns(params, cfg, engine, density=args.lm_density)
+    log.info(
+        "lm-sparse: %d FFN matrices registered (%d SpMV-eligible) at density %.3f",
+        engine.stats.registered, engine.stats.spmv_layers, args.lm_density,
+    )
+    return engine, pruned
+
+
 def serve_lm(args) -> list[Request]:
+    from repro.models.sparse_linear import SLO_PRIORITY
+
     cfg = get_config(args.arch, reduced_config=True)
     if cfg.prefix_len:
         cfg = cfg.replace(prefix_len=0, prefix_lm=False)  # text-only serving demo
+    engine = None
+    if args.lm_sparse and cfg.n_experts and cfg.dispatch_format != "dense":
+        # the engine's gate-masked per-expert path mirrors the dense
+        # dispatch exactly; ell/sell drop capacity-overflow tokens
+        cfg = cfg.replace(dispatch_format="dense")
     params = init_params(model_specs(cfg), jax.random.PRNGKey(args.seed), cfg.param_dtype)
+    if args.lm_sparse:
+        engine, params = _build_lm_engine(args, cfg, params)
     server = BatchedServer(
         params, cfg,
         ServeConfig(batch_slots=args.slots, max_len=args.max_len,
                     max_new_tokens=args.max_new_tokens),
+        engine=engine,
     )
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -66,14 +97,26 @@ def serve_lm(args) -> list[Request]:
             rid=i,
             prompt=rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 17))).tolist(),
             max_new_tokens=args.max_new_tokens,
+            slo=SLO_PRIORITY[i % len(SLO_PRIORITY)] if args.slo == "mixed" else args.slo,
         )
         for i in range(args.requests)
     ]
     done = server.run(reqs)
     for r in done:
-        log.info("req %d: prompt %d toks -> %s", r.rid, len(r.prompt), r.generated)
+        log.info("req %d [%s]: prompt %d toks -> %s", r.rid, r.slo, len(r.prompt), r.generated)
     tput = sum(len(r.generated) for r in done) / max(done[0].latency_s, 1e-9)
     log.info("aggregate throughput: %.1f tok/s over %d requests", tput, len(done))
+    summary = server.summary()
+    log.info("server summary: %s", summary)
+    if args.summary_export:
+        import json
+
+        from repro.utils.io import atomic_write_text
+
+        atomic_write_text(
+            args.summary_export, json.dumps(summary, indent=1, default=float)
+        )
+        log.info("summary -> %s", args.summary_export)
     return done
 
 
@@ -222,6 +265,20 @@ def main(argv=None):
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lm-sparse", action="store_true",
+                    help="LM mode: magnitude-prune the FFN weights and route "
+                         "their matmuls through session-planned SpMV kernels "
+                         "(models/sparse_linear.py)")
+    ap.add_argument("--lm-density", type=float, default=0.05,
+                    help="with --lm-sparse: kept-weight fraction per FFN matrix")
+    ap.add_argument("--slo", default="latency-critical",
+                    choices=["latency-critical", "power-capped", "balanced",
+                             "energy-saving", "mixed"],
+                    help="LM mode: the SLO class stamped on every request "
+                         "('mixed' cycles all four across the request stream)")
+    ap.add_argument("--summary-export", default=None,
+                    help="LM mode: write the server summary (SLO mix, engine "
+                         "plans, energy cells) as JSON here")
     ap.add_argument("--spmv", action="store_true",
                     help="serve SpMV traffic through an AutoSpmvSession")
     ap.add_argument("--spmv-cache", default=None,

@@ -239,12 +239,25 @@ def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
     }
 
 
-def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def mlp(
+    params: dict, x: jax.Array, cfg: ModelConfig, *, engine=None, name: str = ""
+) -> jax.Array:
+    """Gated/gelu FFN. With ``engine`` (an ``EngineHandle`` from
+    models/sparse_linear.py) every matmul dispatches through the sparse
+    inference engine under the key ``{name}.mlp.<w>`` — planned SpMV kernels
+    for registered pruned weights, dense contraction otherwise."""
     cd = jnp.dtype(cfg.compute_dtype)
+
+    def mm(key, h, w):
+        w = w.astype(cd)
+        if engine is None:
+            return jnp.einsum("btd,df->btf", h, w)
+        return engine.matmul(f"{name}.mlp.{key}", h, w)
+
     if cfg.mlp_kind == "gelu":
-        h = jax.nn.gelu(jnp.einsum("btd,df->btf", x, params["w_up"].astype(cd)))
-        return jnp.einsum("btf,fd->btd", h, params["w_down"].astype(cd))
+        h = jax.nn.gelu(mm("w_up", x, params["w_up"]))
+        return mm("w_down", h, params["w_down"])
     act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
-    g = act(jnp.einsum("btd,df->btf", x, params["w_gate"].astype(cd)))
-    u = jnp.einsum("btd,df->btf", x, params["w_up"].astype(cd))
-    return jnp.einsum("btf,fd->btd", g * u, params["w_down"].astype(cd))
+    g = act(mm("w_gate", x, params["w_gate"]))
+    u = mm("w_up", x, params["w_up"])
+    return mm("w_down", g * u, params["w_down"])

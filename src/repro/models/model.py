@@ -227,8 +227,14 @@ def apply_block(
     positions: jax.Array,
     cache: dict | None,
     unroll_attn: bool = False,
+    engine=None,
+    name: str = "",
 ):
-    """Returns (x, new_cache, (moe_aux, tokens_per_expert))."""
+    """Returns (x, new_cache, (moe_aux, tokens_per_expert)).
+
+    ``engine``/``name`` route this block's FFN matmuls through the sparse
+    inference engine (models/sparse_linear.py) under ``{name}.mlp.*`` /
+    ``{name}.moe.*`` keys; attention and recurrence stay dense."""
     zero_aux = (jnp.zeros((), jnp.float32), jnp.zeros((max(cfg.n_experts, 1),), jnp.float32))
     if kind in ("attn", "moe"):
         a, new_cache = attention(
@@ -243,9 +249,9 @@ def apply_block(
         x = x + a
         h = rmsnorm(x, params["ln2"])
         if kind == "moe":
-            y, aux, counts = moe_ffn(params["moe"], h, cfg)
+            y, aux, counts = moe_ffn(params["moe"], h, cfg, engine=engine, name=name)
             return x + y, new_cache, (aux, counts)
-        return x + mlp(params["mlp"], h, cfg), new_cache, zero_aux
+        return x + mlp(params["mlp"], h, cfg, engine=engine, name=name), new_cache, zero_aux
     if kind == "local":
         a, new_cache = _local_attention(
             params["attn"],
@@ -256,11 +262,13 @@ def apply_block(
             unroll=unroll_attn,
         )
         x = x + a
-        return x + mlp(params["mlp"], rmsnorm(x, params["ln2"]), cfg), new_cache, zero_aux
+        y = mlp(params["mlp"], rmsnorm(x, params["ln2"]), cfg, engine=engine, name=name)
+        return x + y, new_cache, zero_aux
     if kind == "rec":
         r, new_cache = _rglru_with_state(params["rec"], rmsnorm(x, params["ln1"]), cfg, cache=cache)
         x = x + r
-        return x + mlp(params["mlp"], rmsnorm(x, params["ln2"]), cfg), new_cache, zero_aux
+        y = mlp(params["mlp"], rmsnorm(x, params["ln2"]), cfg, engine=engine, name=name)
+        return x + y, new_cache, zero_aux
     if kind == "mlstm":
         x, new_cache = mlstm_block(params, x, cfg, cache=cache)
         return x, new_cache, zero_aux
@@ -299,15 +307,22 @@ def _logits(params, cfg, x):
     return logits
 
 
-def _run_blocks(params, cfg, x, *, positions, cache, unroll_attn, unroll_layers):
+def _run_blocks(params, cfg, x, *, positions, cache, unroll_attn, unroll_layers, engine=None):
+    if engine is not None and cfg.n_groups and not unroll_layers:
+        raise ValueError(
+            "a sparse inference engine dispatches per-layer host-planned "
+            "kernels, which cannot live inside the group scan over stacked "
+            "params — call with unroll_layers=True to serve sparse"
+        )
     aux_l = jnp.zeros((), jnp.float32)
     aux_c = jnp.zeros((max(cfg.n_experts, 1),), jnp.float32)
     new_cache: dict[str, Any] = {"head": [], "groups": [], "tail": []}
 
     def run_list(kinds, plist, clist, x, aux_l, aux_c, out_key):
-        for kind, p, c in zip(kinds, plist, clist):
+        for i, (kind, p, c) in enumerate(zip(kinds, plist, clist)):
             x, nc, (al, ac) = apply_block(
-                kind, p, x, cfg, positions=positions, cache=c, unroll_attn=unroll_attn
+                kind, p, x, cfg, positions=positions, cache=c,
+                unroll_attn=unroll_attn, engine=engine, name=f"{out_key}{i}",
             )
             aux_l, aux_c = aux_l + al, aux_c + ac
             new_cache[out_key].append(nc)
@@ -320,11 +335,12 @@ def _run_blocks(params, cfg, x, *, positions, cache, unroll_attn, unroll_layers)
         pstack = params["groups"][pi]
         cstack = cache["groups"][pi] if cache else None
 
-        def group_fn(carry, xs, kind=kind):
+        def group_fn(carry, xs, kind=kind, eng=None, name=""):
             xx, al, ac = carry
             p, c = xs
             xx, nc, (dl, dc) = apply_block(
-                kind, p, xx, cfg, positions=positions, cache=c, unroll_attn=unroll_attn
+                kind, p, xx, cfg, positions=positions, cache=c,
+                unroll_attn=unroll_attn, engine=eng, name=name,
             )
             xx = hint(xx, ("batch", "seq", None))
             return (xx, al + dl, ac + dc), nc
@@ -335,7 +351,15 @@ def _run_blocks(params, cfg, x, *, positions, cache, unroll_attn, unroll_layers)
             for g in range(cfg.n_groups):
                 p_g = jax.tree.map(lambda a: a[g], pstack)
                 c_g = jax.tree.map(lambda a: a[g], cstack) if cstack is not None else None
-                (x, aux_l, aux_c), nc = body((x, aux_l, aux_c), (p_g, c_g))
+                if engine is None:
+                    (x, aux_l, aux_c), nc = body((x, aux_l, aux_c), (p_g, c_g))
+                else:
+                    # host-planned kernels under remat could re-trace on the
+                    # backward pass; the engine path is inference-only, so
+                    # skip the checkpoint wrapper and name the layer
+                    (x, aux_l, aux_c), nc = group_fn(
+                        (x, aux_l, aux_c), (p_g, c_g), eng=engine, name=f"g{pi}x{g}"
+                    )
                 ncs.append(nc)
             nc_stacked = (
                 jax.tree.map(lambda *a: jnp.stack(a), *ncs) if cache else None
@@ -371,6 +395,7 @@ def forward(
     positions=None,
     unroll_attn: bool = False,
     unroll_layers: bool = False,
+    engine=None,
 ):
     """Training forward: full sequence, no cache. Returns (logits, aux)."""
     x = _embed(params, cfg, tokens, embeds, prefix_embeds)
@@ -379,7 +404,7 @@ def forward(
         positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
     x, _, aux = _run_blocks(
         params, cfg, x, positions=positions, cache=None,
-        unroll_attn=unroll_attn, unroll_layers=unroll_layers,
+        unroll_attn=unroll_attn, unroll_layers=unroll_layers, engine=engine,
     )
     return _logits(params, cfg, x), aux
 
@@ -394,6 +419,7 @@ def prefill(
     prefix_embeds=None,
     unroll_attn: bool = False,
     unroll_layers: bool = False,
+    engine=None,
 ):
     """Serving prefill: runs the prompt, fills the cache.
     Returns (logits, cache, aux)."""
@@ -402,7 +428,7 @@ def prefill(
     positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
     x, cache, aux = _run_blocks(
         params, cfg, x, positions=positions, cache=cache,
-        unroll_attn=unroll_attn, unroll_layers=unroll_layers,
+        unroll_attn=unroll_attn, unroll_layers=unroll_layers, engine=engine,
     )
     return _logits(params, cfg, x), cache, aux
 
@@ -415,12 +441,17 @@ def decode_step(
     positions,
     *,
     unroll_layers: bool = False,
+    engine=None,
 ):
     """One decoding step. tokens: (B, 1) int32; positions: (B, 1) int32 (the
-    absolute index the new token occupies). Returns (logits, cache)."""
+    absolute index the new token occupies). Returns (logits, cache).
+
+    ``engine`` routes the FFN matmuls through planned SpMV kernels (sparse
+    serving); requires ``unroll_layers=True`` when the config has scanned
+    layer groups."""
     x = _embed(params, cfg, tokens)
     x, cache, _ = _run_blocks(
         params, cfg, x, positions=positions, cache=cache,
-        unroll_attn=False, unroll_layers=unroll_layers,
+        unroll_attn=False, unroll_layers=unroll_layers, engine=engine,
     )
     return _logits(params, cfg, x), cache

@@ -92,17 +92,51 @@ def _route(params, x, cfg):
     return top_e, top_w, counts, aux
 
 
+def _gate_full(top_e, top_w, T: int, E: int, cd) -> jax.Array:
+    """(B, T, E) dense routing weights: top_w scattered at top_e, 0 elsewhere."""
+    B = top_e.shape[0]
+    gate = jnp.zeros((B, T, E), cd)
+    return jax.vmap(
+        lambda g, e, w: g.at[jnp.arange(T)[:, None], e].set(w.astype(cd))
+    )(gate, top_e, top_w)
+
+
 def moe_ffn(
-    params: dict, x: jax.Array, cfg: ModelConfig
+    params: dict, x: jax.Array, cfg: ModelConfig, *, engine=None, name: str = ""
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """x: (B, T, D) -> (y, aux_loss, tokens_per_expert)."""
+    """x: (B, T, D) -> (y, aux_loss, tokens_per_expert).
+
+    With ``engine`` (sparse serving) every expert's pruned FFN slices run as
+    planned SpMV matmuls under ``{name}.moe.<w>.<e>`` keys, weighted by the
+    same dense gate the ``dispatch_format="dense"`` baseline uses — the two
+    paths are exactly the same math, so sparse-served MoE logits match the
+    dense reference. Requires ``dispatch_format="dense"``: ell/sell drop
+    capacity-overflow tokens, which the per-expert loop does not reproduce.
+    """
     B, T, D = x.shape
     cd = jnp.dtype(cfg.compute_dtype)
     E, K = cfg.n_experts, cfg.top_k
     top_e, top_w, counts, aux = _route(params, x, cfg)
 
     dispatch = cfg.dispatch_format
-    if dispatch == "dense":
+    if engine is not None and dispatch != "dense":
+        raise ValueError(
+            "sparse-expert serving needs dispatch_format='dense' (the gate-"
+            f"masked per-expert path); got {dispatch!r} — override the config "
+            "with .replace(dispatch_format='dense') when attaching an engine"
+        )
+    if engine is not None:
+        gate_full = _gate_full(top_e, top_w, T, E, cd)
+        xc = x.astype(cd)
+        y = jnp.zeros((B, T, D), cd)
+        for e in range(E):
+            g = jax.nn.silu(
+                engine.matmul(f"{name}.moe.w_gate.{e}", xc, params["w_gate"][e].astype(cd))
+            )
+            u = engine.matmul(f"{name}.moe.w_up.{e}", xc, params["w_up"][e].astype(cd))
+            h = engine.matmul(f"{name}.moe.w_down.{e}", g * u, params["w_down"][e].astype(cd))
+            y = y + h * gate_full[..., e : e + 1]
+    elif dispatch == "dense":
         if T * E * cfg.d_ff_expert > (1 << 28):
             raise ValueError(
                 "dense dispatch on a config this large would materialize "
@@ -111,10 +145,7 @@ def moe_ffn(
         # every expert computes every token (the dense-format baseline)
         xe = jnp.broadcast_to(x[:, None, :, :], (B, E, T, D)).astype(cd)
         h = _expert_ffn(xe, params["w_gate"], params["w_up"], params["w_down"], cd)  # (B,E,T,D)
-        gate_full = jnp.zeros((B, T, E), cd)
-        gate_full = jax.vmap(
-            lambda g, e, w: g.at[jnp.arange(T)[:, None], e].set(w.astype(cd))
-        )(gate_full, top_e, top_w)
+        gate_full = _gate_full(top_e, top_w, T, E, cd)
         y = jnp.einsum("betd,bte->btd", h, gate_full)
     elif dispatch in ("ell", "sell"):
         t_flat = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K)).reshape(-1)
@@ -160,9 +191,18 @@ def moe_ffn(
 
     if cfg.n_shared_experts:
         sh = params["shared"]
-        g = jax.nn.silu(jnp.einsum("btd,df->btf", x, sh["w_gate"].astype(cd)))
-        u = jnp.einsum("btd,df->btf", x, sh["w_up"].astype(cd))
-        y = y + jnp.einsum("btf,fd->btd", g * u, sh["w_down"].astype(cd))
+        if engine is None:
+            g = jax.nn.silu(jnp.einsum("btd,df->btf", x, sh["w_gate"].astype(cd)))
+            u = jnp.einsum("btd,df->btf", x, sh["w_up"].astype(cd))
+            y = y + jnp.einsum("btf,fd->btd", g * u, sh["w_down"].astype(cd))
+        else:
+            g = jax.nn.silu(
+                engine.matmul(f"{name}.moe.shared.w_gate", x, sh["w_gate"].astype(cd))
+            )
+            u = engine.matmul(f"{name}.moe.shared.w_up", x, sh["w_up"].astype(cd))
+            y = y + engine.matmul(
+                f"{name}.moe.shared.w_down", g * u, sh["w_down"].astype(cd)
+            )
     return y.astype(x.dtype), aux, counts.sum(0)
 
 

@@ -17,6 +17,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def init_error_feedback(params: Any) -> Any:
@@ -24,12 +25,53 @@ def init_error_feedback(params: Any) -> Any:
 
 
 def _topk_sparsify(g: jax.Array, frac: float) -> jax.Array:
+    """Keep the top-``frac`` fraction of entries by magnitude.
+
+    ``frac`` is static (a Python float), so the edge cases resolve at trace
+    time: ``frac <= 0`` keeps nothing (the error feedback then carries the
+    full gradient forward), ``frac >= 1`` — or any ``frac`` whose k covers
+    the whole tensor — returns ``g`` unchanged, and any positive ``frac``
+    keeps at least one entry. Ties at the threshold magnitude are ALL kept
+    (the compare is ``>=``), so the realized density can exceed ``frac`` on
+    heavily tied tensors — by design: dropping an arbitrary subset of equal
+    magnitudes would make the compression nondeterministic across backends.
+    """
+    if frac <= 0.0:
+        return jnp.zeros_like(g)
     flat = g.reshape(-1)
     k = max(int(flat.shape[0] * frac), 1)
     if k >= flat.shape[0]:
         return g
     thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
     return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def magnitude_prune(w: np.ndarray, density: float) -> tuple[np.ndarray, float]:
+    """Export a magnitude-pruned weight as a dense array + density stat.
+
+    Host-side numpy twin of ``_topk_sparsify`` for the sparse-serving path:
+    keeps exactly ``k = round(density * size)`` entries with the largest
+    magnitudes (deterministic tie-break: the earlier flat index wins — an
+    exact-k contract, unlike the threshold compare above) and zeroes the
+    rest. ``density <= 0`` zeroes everything; ``density >= 1`` returns a
+    float32 copy unchanged. Returns ``(pruned float32 array, achieved
+    density)`` — the achieved density can fall below the request when the
+    input already holds zeros among its top-k magnitudes.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    size = int(w.size)
+    if size == 0:
+        return w.copy(), 0.0
+    if density >= 1.0:
+        return w.copy(), float(np.count_nonzero(w)) / size
+    out = np.zeros_like(w)
+    k = int(round(float(density) * size))
+    if k <= 0:
+        return out, 0.0
+    order = np.argsort(-np.abs(w).reshape(-1), kind="stable")[:k]
+    out_flat, w_flat = out.reshape(-1), w.reshape(-1)
+    out_flat[order] = w_flat[order]
+    return out, float(np.count_nonzero(out)) / size
 
 
 def compress_gradients(

@@ -72,6 +72,10 @@ _SUITE_RAW = [
 _EXTRA_RAW = [
     # web adjacency for the PageRank/power-iteration solver workload
     ("webgraph", 875_713, 5_105_039, "webgraph"),
+    # magnitude-pruned LM FFN projection for the sparse-serving workload
+    # (full-scale shape of a 7B-class gate/up projection at ~8 kept weights
+    # per row; scaled copies keep the unstructured-topk row statistics)
+    ("pruned-ffn", 11_008, 88_064, "prunedffn"),
 ]
 
 SUITE: dict[str, MatrixSpec] = {
@@ -196,6 +200,19 @@ def _gen_webgraph(n: int, avg: float, rng) -> np.ndarray:
     return _scatter(n, n, rows[off_diag], cols[off_diag], rng)
 
 
+def _gen_prunedffn(n: int, avg: float, rng) -> np.ndarray:
+    # magnitude-pruned LM FFN weight: global top-k over a Gaussian matrix.
+    # Unlike the graph/FEM patterns the support is i.i.d. (no banding, no
+    # hubs) but the row-count distribution is the binomial an unstructured
+    # topk induces — tight around avg with no empty rows at these densities,
+    # the regime the sparse LM serving path feeds through serve_optimize.
+    from repro.optim.compress import magnitude_prune
+
+    w = rng.normal(size=(n, n)).astype(np.float32)
+    pruned, _ = magnitude_prune(w, min(avg / n, 1.0))
+    return pruned
+
+
 def normalize_columns(dense: np.ndarray) -> np.ndarray:
     """Column-stochastic normalization: each nonzero column sums to 1.
 
@@ -228,6 +245,7 @@ _PATTERNS = {
     "denserows": _gen_denserows,
     "bipartite": _gen_bipartite,
     "webgraph": _gen_webgraph,
+    "prunedffn": _gen_prunedffn,
 }
 
 PATTERN_NAMES = tuple(_PATTERNS)

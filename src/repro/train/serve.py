@@ -37,6 +37,7 @@ from repro.configs.base import ModelConfig
 from repro.core.session import AutoSpmvSession
 from repro.models import decode_step, prefill
 from repro.models.model import init_cache
+from repro.models.sparse_linear import SLO_PRIORITY, slo_objective
 from repro.obs.energy import EnergyAccountant
 from repro.obs.http import ObsHTTPServer
 from repro.obs.metrics import get_metrics
@@ -60,23 +61,47 @@ class Request:
     rid: int
     prompt: list[int]
     max_new_tokens: int
+    slo: str = "latency-critical"  # SLO class (models/sparse_linear.py)
     generated: list[int] = field(default_factory=list)
     done: bool = False
     latency_s: float = 0.0
 
 
 class BatchedServer:
-    def __init__(self, params: Any, cfg: ModelConfig, sc: ServeConfig):
+    """Slot-batched LM decode; optionally sparse-served.
+
+    With ``engine`` (a ``SparseInferenceEngine`` over pruned FFN weights)
+    every decode tick routes its FFN matmuls through planned SpMV kernels.
+    Each request carries an SLO class; a shared tick runs under the
+    highest-priority class among the occupied slots (``SLO_PRIORITY``), one
+    jitted decode graph per objective, while the energy accounting keys each
+    request's share of the tick by its *own* class — mixed traffic shows who
+    burned the joules. Prefill stays dense: the weights themselves are
+    pruned, so the prompt pass is numerically identical either way.
+    """
+
+    def __init__(
+        self, params: Any, cfg: ModelConfig, sc: ServeConfig, *, engine=None
+    ):
         self.params = params
         self.cfg = cfg
         self.sc = sc
+        self.engine = engine
         self.cache = init_cache(cfg, sc.batch_slots, sc.max_len)
         self.slot_req: list[Request | None] = [None] * sc.batch_slots
         self.slot_pos = np.zeros(sc.batch_slots, np.int32)
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
         )
+        # one jitted decode graph per objective, closing over the bound
+        # engine handle (built lazily: mixed traffic may never touch some)
+        self._decode_by_objective: dict[str, Any] = {}
         self._prefill_cache = init_cache(cfg, 1, sc.max_len)
+        self.ticks = 0
+        self.requests_served = 0
+        self._slo_counts: dict[str, int] = {}
+        self.metrics = get_metrics()
+        self.energy = EnergyAccountant(self.metrics)
 
     # ------------------------------------------------------------ admission
     def _admit(self, req: Request, slot: int):
@@ -91,12 +116,40 @@ class BatchedServer:
         )
         self.slot_req[slot] = req
         self.slot_pos[slot] = len(req.prompt)
+        if self.engine is not None:
+            slo_objective(req.slo)  # validate the class at admission
+            self._slo_counts[req.slo] = self._slo_counts.get(req.slo, 0) + 1
+            self.metrics.counter("lm_requests_total", slo=req.slo).inc()
         log.info("admitted request %d into slot %d (prompt %d tokens)", req.rid, slot, len(req.prompt))
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
     # ---------------------------------------------------------------- decode
+    def _tick_objective(self) -> str:
+        """The paper objective this tick decodes under: the highest-priority
+        SLO class among the occupied slots wins the shared batch."""
+        active = {r.slo for r in self.slot_req if r is not None}
+        for slo in SLO_PRIORITY:
+            if slo in active:
+                return slo_objective(slo)
+        return self.sc.objective
+
+    def _decode_for(self, objective: str):
+        fn = self._decode_by_objective.get(objective)
+        if fn is None:
+            # plan eagerly: format conversion must not run under the trace
+            self.engine.plan_all(objective)
+            handle = self.engine.bind(objective)
+            cfg = self.cfg
+            fn = jax.jit(
+                lambda p, c, t, pos: decode_step(
+                    p, cfg, c, t, pos, unroll_layers=True, engine=handle
+                )
+            )
+            self._decode_by_objective[objective] = fn
+        return fn
+
     def _decode_tick(self):
         B = self.sc.batch_slots
         toks = np.zeros((B, 1), np.int32)
@@ -104,22 +157,59 @@ class BatchedServer:
             if r is not None:
                 toks[i, 0] = r.generated[-1]
         pos = jnp.asarray(self.slot_pos[:, None])
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks), pos
-        )
+        if self.engine is None:
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks), pos
+            )
+        else:
+            objective = self._tick_objective()
+            t0 = time.perf_counter()
+            logits, self.cache = self._decode_for(objective)(
+                self.params, self.cache, jnp.asarray(toks), pos
+            )
+            logits = jax.block_until_ready(logits)
+            dt = time.perf_counter() - t0
+            self._account_tick(objective, dt)
+        self.ticks += 1
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for i, r in enumerate(self.slot_req):
             if r is None:
                 continue
             r.generated.append(int(nxt[i]))
             self.slot_pos[i] += 1
+            if self.engine is not None:
+                self.metrics.counter("lm_tokens_total", slo=r.slo).inc()
             if (
                 len(r.generated) >= r.max_new_tokens
                 or self.slot_pos[i] >= self.sc.max_len - 1
             ):
                 r.done = True
                 self.slot_req[i] = None
+                self.requests_served += 1
                 log.info("request %d finished (%d tokens)", r.rid, len(r.generated))
+
+    def _account_tick(self, objective: str, dt: float) -> None:
+        """Split one measured tick across the active requests' own SLO
+        classes. Each slot decodes its own token through every planned
+        matrix, so the modeled per-token cost is the full per-pass estimate
+        while the measured wall time is shared."""
+        active = [r for r in self.slot_req if r is not None]
+        if not active:
+            return
+        self.metrics.histogram(
+            "lm_decode_tick_seconds", objective=objective
+        ).observe(dt)
+        fmt = self.engine.format_mix(objective)
+        modeled = self.engine.modeled_objectives(objective)
+        share = dt / len(active)
+        for r in active:
+            self.energy.observe(
+                fmt=fmt,
+                objective=slo_objective(r.slo),
+                measured_s=share,
+                modeled=modeled,
+                block="lm",
+            )
 
     # ------------------------------------------------------------------- run
     def run(self, requests: list[Request]) -> list[Request]:
@@ -135,6 +225,32 @@ class BatchedServer:
         for r in requests:
             r.latency_s = time.perf_counter() - t0
         return requests
+
+    def summary(self) -> dict:
+        """Serving stats for the CLI dump / CI assertions: SLO class mix,
+        engine plan counts, session amortization counters, energy cells."""
+        out: dict[str, Any] = {
+            "requests": self.requests_served,
+            "ticks": self.ticks,
+            "slo_classes": dict(sorted(self._slo_counts.items())),
+        }
+        if self.engine is not None:
+            out["engine"] = self.engine.summary()
+            out["session"] = self.engine.session.stats.as_dict()
+            cells = self.energy.summary().get("cells", {})
+            if cells:
+                out["energy"] = cells
+            latency: dict[str, dict] = {}
+            for hist in self.metrics.instruments(
+                "histogram", "lm_decode_tick_seconds"
+            ):
+                if not hist.count:
+                    continue
+                labels = dict(hist.labels)
+                latency[labels.get("objective", "")] = hist.as_dict()
+            if latency:
+                out["tick_latency"] = latency
+        return out
 
 
 # --------------------------------------------------------------------- SpMV

@@ -1,0 +1,95 @@
+"""Top-k sparsification edge cases + the magnitude_prune export helper
+(optim/compress.py) — the weight-pruning substrate of the sparse LM
+serving path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compress import _topk_sparsify, magnitude_prune
+
+
+# ----------------------------------------------------------- _topk_sparsify
+def test_topk_frac_zero_keeps_nothing():
+    g = jnp.asarray([3.0, -1.0, 2.0, 0.5])
+    out = _topk_sparsify(g, 0.0)
+    assert np.array_equal(np.asarray(out), np.zeros(4, np.float32))
+    out = _topk_sparsify(g, -0.25)
+    assert not np.any(np.asarray(out))
+
+
+def test_topk_frac_one_returns_unchanged():
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)).astype(np.float32))
+    for frac in (1.0, 1.5):
+        out = _topk_sparsify(g, frac)
+        assert np.array_equal(np.asarray(out), np.asarray(g))
+
+
+def test_topk_small_positive_frac_keeps_at_least_one():
+    g = jnp.asarray([3.0, -1.0, 2.0, 0.5])
+    out = np.asarray(_topk_sparsify(g, 1e-6))
+    assert np.count_nonzero(out) == 1
+    assert out[0] == 3.0  # the largest magnitude survives
+
+
+def test_topk_keeps_all_threshold_ties():
+    # four entries tie at the threshold magnitude: the >= compare keeps them
+    # all, so realized density exceeds frac (documented determinism choice)
+    g = jnp.asarray([2.0, -2.0, 2.0, 2.0, 1.0, -1.0, 0.5, 0.25])
+    out = np.asarray(_topk_sparsify(g, 0.25))  # k = 2, but 4 entries tie
+    assert np.count_nonzero(out) == 4
+    assert np.array_equal(out[:4], np.asarray([2.0, -2.0, 2.0, 2.0], np.float32))
+
+
+# ---------------------------------------------------------- magnitude_prune
+def test_magnitude_prune_basic_density():
+    w = np.random.default_rng(1).normal(size=(32, 32)).astype(np.float32)
+    pruned, density = magnitude_prune(w, 0.1)
+    k = int(round(0.1 * w.size))
+    assert np.count_nonzero(pruned) == k
+    assert density == pytest.approx(k / w.size)
+    # kept entries are exactly the k largest magnitudes, values unchanged
+    kept = np.abs(pruned[pruned != 0])
+    assert kept.min() >= np.sort(np.abs(w).reshape(-1))[-k]
+    assert np.all((pruned == 0) | (pruned == w))
+
+
+def test_magnitude_prune_edges():
+    w = np.asarray([[1.0, -2.0], [0.0, 3.0]], np.float32)
+    full, d_full = magnitude_prune(w, 1.0)
+    assert np.array_equal(full, w)
+    assert d_full == pytest.approx(3 / 4)  # reports ACTUAL density incl. zeros
+    zero, d_zero = magnitude_prune(w, 0.0)
+    assert not np.any(zero) and d_zero == 0.0
+    empty, d_empty = magnitude_prune(np.zeros((0,), np.float32), 0.5)
+    assert empty.size == 0 and d_empty == 0.0
+
+
+def test_magnitude_prune_tie_break_deterministic_exact_k():
+    # all magnitudes equal: unlike _topk_sparsify, the helper keeps EXACTLY
+    # k entries, earlier flat index first (stable argsort contract)
+    w = np.full((4, 4), 2.0, np.float32)
+    pruned, density = magnitude_prune(w, 0.25)
+    assert np.count_nonzero(pruned) == 4
+    assert np.count_nonzero(pruned.reshape(-1)[:4]) == 4  # first flat indices win
+    assert density == pytest.approx(0.25)
+    again, _ = magnitude_prune(w, 0.25)
+    assert np.array_equal(pruned, again)
+
+
+def test_magnitude_prune_achieved_density_below_request():
+    # zeros among the top-k magnitudes: achieved density falls below request
+    w = np.zeros((4, 4), np.float32)
+    w[0, 0] = 1.0
+    pruned, density = magnitude_prune(w, 0.5)
+    assert np.count_nonzero(pruned) == 1
+    assert density == pytest.approx(1 / 16)
+    assert density < 0.5
+
+
+def test_magnitude_prune_output_is_float32_copy():
+    w = np.random.default_rng(2).normal(size=(8,)).astype(np.float64)
+    pruned, _ = magnitude_prune(w, 0.5)
+    assert pruned.dtype == np.float32
+    pruned[:] = 0  # mutating the output must not touch the input
+    assert np.any(w)

@@ -1,0 +1,34 @@
+"""Subprocess smoke for the runnable examples: ``examples/serve_lm.py`` must
+serve a tiny request stream to completion in both dense and sparse modes
+(the sparse mode also runs its built-in dense-vs-sparse numerics check)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run_serve_lm(extra: list[str]) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, str(REPO / "examples" / "serve_lm.py"),
+         "--requests", "2", "--slots", "1", "--max-new-tokens", "2", *extra],
+        capture_output=True, text=True, timeout=560, cwd=str(REPO), env=env,
+    )
+
+
+@pytest.mark.parametrize("mode", ["dense", "sparse"])
+def test_serve_lm_example_smoke(mode):
+    proc = _run_serve_lm(["--sparse"] if mode == "sparse" else [])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    # both requests generated tokens and the aggregate line printed
+    assert "req 0" in proc.stdout and "req 1" in proc.stdout
+    assert "4 tokens in" in proc.stdout, proc.stdout
+    if mode == "sparse":
+        assert "dense-vs-sparse decode logits" in proc.stdout
+        assert "energy cells" in proc.stdout

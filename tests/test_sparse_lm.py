@@ -1,0 +1,333 @@
+"""Sparse LM inference engine (models/sparse_linear.py): registration and
+dispatch semantics, dense-vs-sparse numerics through the model stack, the
+one-plan-per-(fingerprint, objective) amortization contract, SLO routing in
+``BatchedServer``, and the pruned-ffn suite pattern."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import AutoSpMV, AutoSpmvSession
+from repro.kernels.common import DEFAULT_SCHEDULE
+from repro.models.sparse_linear import (
+    SLO_OBJECTIVES,
+    SLO_PRIORITY,
+    SparseInferenceEngine,
+    prune_model_ffns,
+    slo_objective,
+)
+from repro.optim.compress import magnitude_prune
+
+
+# --------------------------------------------------------------------- fakes
+class _FakePredictor:
+    def predict_format(self, feats, objective):
+        return "ell"
+
+    def predict_schedule(self, feats, objective):
+        return DEFAULT_SCHEDULE
+
+    def estimate_objective(self, feats, config, objective):
+        return 0.5 if config.fmt == "ell" else 1.0
+
+
+class _FakeOverhead:
+    def total_overhead(self, feats, fmt):
+        return 1e6
+
+    def predict_c(self, feats, fmt):
+        return 1.0
+
+
+def make_engine(**kwargs) -> SparseInferenceEngine:
+    session = AutoSpmvSession(AutoSpMV(_FakePredictor(), _FakeOverhead()))
+    return SparseInferenceEngine(session, **kwargs)
+
+
+def sparse_weight(d_in: int, d_out: int, density: float = 0.1, seed: int = 0):
+    w = np.random.default_rng(seed).normal(size=(d_in, d_out)).astype(np.float32)
+    pruned, _ = magnitude_prune(w, density)
+    return pruned
+
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    param_dtype="float32", compute_dtype="float32",
+)
+
+MOE = ModelConfig(
+    name="tiny-moe", family="moe", n_layers=1, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    n_experts=4, top_k=2, d_ff_expert=32, n_shared_experts=1,
+    dispatch_format="dense", param_dtype="float32", compute_dtype="float32",
+)
+
+
+# ----------------------------------------------------------------- SLO maps
+def test_slo_objective_mapping():
+    assert set(SLO_OBJECTIVES) == set(SLO_PRIORITY)
+    assert sorted(SLO_OBJECTIVES.values()) == sorted(
+        ["latency", "power", "efficiency", "energy"]
+    )
+    assert slo_objective("latency-critical") == "latency"
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        slo_objective("best-effort")
+
+
+# ------------------------------------------------------------- registration
+def test_register_eligibility_and_orientation():
+    engine = make_engine(density_threshold=0.5)
+    sparse = engine.register("a", sparse_weight(64, 96, density=0.1))
+    assert sparse.spmv_eligible
+    assert (sparse.d_in, sparse.d_out) == (64, 96)
+    assert sparse.weight_t.shape == (96, 64)  # SpMV orientation: A = W.T
+    assert sparse.density == pytest.approx(0.1, rel=0.1)
+
+    dense = engine.register("b", np.ones((8, 8), np.float32))
+    assert not dense.spmv_eligible  # density 1.0 > threshold
+    zero = engine.register("c", np.zeros((8, 8), np.float32))
+    assert not zero.spmv_eligible  # empty matrix: nothing to SpMV
+    assert engine.stats.registered == 3
+    assert engine.stats.spmv_layers == 1
+
+    engine.register("a", sparse_weight(64, 96, density=0.1))  # replace
+    assert engine.stats.registered == 3  # re-registering is not a new layer
+
+    with pytest.raises(ValueError, match="2-D"):
+        engine.register("d", np.zeros((2, 2, 2), np.float32))
+
+
+# ------------------------------------------------------------------- matmul
+def test_matmul_matches_dense_and_fallbacks():
+    engine = make_engine(max_spmv_tokens=4)
+    w = sparse_weight(64, 96, density=0.1)
+    engine.register("lin", w)
+    x = jnp.asarray(
+        np.random.default_rng(1).normal(size=(1, 3, 64)).astype(np.float32)
+    )
+    ref = np.asarray(jnp.einsum("btd,df->btf", x, jnp.asarray(w)))
+
+    y = np.asarray(engine.matmul("lin", x, jnp.asarray(w), "latency"))
+    assert y.shape == (1, 3, 96)
+    assert np.abs(y - ref).max() < 1e-5
+    assert engine.stats.spmv_matmuls == 1
+    assert engine.session.stats.requests == 1  # exactly one plan
+
+    # unregistered name: dense contraction, no plan, no fallback counter
+    y2 = engine.matmul("other", x, jnp.asarray(w), "latency")
+    assert np.abs(np.asarray(y2) - ref).max() < 1e-6
+    assert engine.stats.dense_fallbacks == 0
+
+    # token count above the SpMV window: dense fallback, counted
+    big = jnp.concatenate([x, x], axis=1)  # 6 tokens > max_spmv_tokens=4
+    engine.matmul("lin", big, jnp.asarray(w), "latency")
+    assert engine.stats.dense_fallbacks == 1
+    assert engine.session.stats.requests == 1  # no new plan either
+
+
+def test_plan_amortization_per_fingerprint_and_objective():
+    engine = make_engine()
+    w = sparse_weight(32, 48, density=0.2, seed=2)
+    engine.register("a", w)
+    engine.register("a_twin", w.copy())  # same bytes -> same fingerprint
+    x = jnp.ones((1, 32), jnp.float32)
+    for _ in range(3):
+        engine.matmul("a", x, jnp.asarray(w), "latency")
+        engine.matmul("a_twin", x, jnp.asarray(w), "latency")
+    # twin shares the fingerprint: ONE serve_optimize for both, ever
+    assert engine.session.stats.requests == 1
+    engine.matmul("a", x, jnp.asarray(w), "energy")
+    assert engine.session.stats.requests == 2  # new objective -> new plan
+    assert engine.stats.plans == 2
+    assert engine.format_mix("latency") in ("csr", "ell", "sell", "bell")
+    modeled = engine.modeled_objectives("latency")
+    assert set(modeled) == {"latency", "energy", "power", "efficiency"}
+
+
+# --------------------------------------------------------------- model path
+def test_decode_step_sparse_matches_dense_and_plans_stay_flat():
+    from repro.models.model import decode_step, init_cache, model_specs, prefill
+    from repro.models.param import init_params
+
+    cfg = TINY
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    engine = make_engine()
+    pruned = prune_model_ffns(params, cfg, engine, density=0.1)
+    assert engine.stats.registered == 6  # 2 layers x 3 swiglu matrices
+    assert engine.stats.spmv_layers == 6
+
+    tokens = jnp.asarray(
+        np.random.default_rng(3).integers(0, cfg.vocab_size, (1, 5)), jnp.int32
+    )
+    cache = init_cache(cfg, 1, 32)
+    logits, cache, _ = prefill(pruned, cfg, cache, tokens=tokens)
+    nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    pos = jnp.full((1, 1), 5, jnp.int32)
+
+    ld, _ = decode_step(pruned, cfg, cache, nxt, pos)
+    handle = engine.bind("latency")
+    ls, cache_s = decode_step(
+        pruned, cfg, cache, nxt, pos, unroll_layers=True, engine=handle
+    )
+    assert float(jnp.max(jnp.abs(ld - ls))) < 5e-4
+
+    # the acceptance counter: one serve_optimize per distinct weight matrix
+    # for the ENTIRE decode — further steps must not add plans
+    assert engine.session.stats.requests == 6
+    for _ in range(2):
+        nxt = jnp.argmax(ls[:, -1:], axis=-1).astype(jnp.int32)
+        pos = pos + 1
+        ls, cache_s = decode_step(
+            pruned, cfg, cache_s, nxt, pos, unroll_layers=True, engine=handle
+        )
+    assert engine.session.stats.requests == 6
+
+
+def test_engine_requires_unrolled_groups():
+    from repro.models.model import forward, model_specs
+    from repro.models.param import init_params
+
+    cfg = TINY
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    engine = make_engine()
+    tokens = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="unroll_layers=True"):
+        forward(params, cfg, tokens=tokens, engine=engine.bind("latency"))
+
+
+# ---------------------------------------------------------------------- MoE
+def _moe_params(cfg, seed: int = 0):
+    from repro.models.moe import moe_specs
+    from repro.models.param import init_params
+
+    return init_params(moe_specs(cfg), jax.random.PRNGKey(seed), "float32")
+
+
+def _register_moe(engine, params, cfg, name: str, density: float = 0.2):
+    out = dict(params)
+    for k in ("w_gate", "w_up", "w_down"):
+        stacked = np.asarray(params[k])
+        pruned = np.stack(
+            [magnitude_prune(stacked[e], density)[0] for e in range(cfg.n_experts)]
+        )
+        for e in range(cfg.n_experts):
+            engine.register(f"{name}.moe.{k}.{e}", pruned[e])
+        out[k] = pruned
+    sh = dict(params["shared"])
+    for k in ("w_gate", "w_up", "w_down"):
+        sh[k] = magnitude_prune(np.asarray(sh[k]), density)[0]
+        engine.register(f"{name}.moe.shared.{k}", sh[k])
+    out["shared"] = sh
+    return out
+
+
+def test_moe_engine_matches_dense_dispatch():
+    from repro.models.moe import moe_ffn
+
+    cfg = MOE
+    engine = make_engine()
+    params = _register_moe(engine, _moe_params(cfg), cfg, "b0")
+    x = jnp.asarray(
+        np.random.default_rng(4).normal(size=(1, 4, cfg.d_model)).astype(np.float32)
+    )
+    y_dense, aux_d, counts_d = moe_ffn(params, x, cfg)
+    y_sparse, aux_s, counts_s = moe_ffn(
+        params, x, cfg, engine=engine.bind("latency"), name="b0"
+    )
+    assert float(jnp.max(jnp.abs(y_dense - y_sparse))) < 5e-4
+    assert np.array_equal(np.asarray(counts_d), np.asarray(counts_s))
+    # every expert slice + shared FFN planned exactly once
+    assert engine.session.stats.requests == engine.stats.spmv_layers
+
+
+def test_moe_engine_rejects_capacity_dispatch():
+    from repro.models.moe import moe_ffn
+
+    cfg = MOE.replace(dispatch_format="ell")
+    engine = make_engine()
+    params = _moe_params(cfg)
+    x = jnp.zeros((1, 4, cfg.d_model), jnp.float32)
+    with pytest.raises(ValueError, match="dispatch_format='dense'"):
+        moe_ffn(params, x, cfg, engine=engine.bind("latency"), name="b0")
+
+
+# ------------------------------------------------------------ serving layer
+def test_batched_server_slo_summary_and_energy_cells():
+    from repro.models.model import model_specs
+    from repro.models.param import init_params
+    from repro.train.serve import BatchedServer, Request, ServeConfig
+
+    cfg = TINY
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    engine = make_engine()
+    pruned = prune_model_ffns(params, cfg, engine, density=0.1)
+    server = BatchedServer(
+        pruned, cfg,
+        ServeConfig(batch_slots=1, max_len=64, max_new_tokens=2),
+        engine=engine,
+    )
+    reqs = [
+        Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2, slo="latency-critical"),
+        Request(rid=1, prompt=[4, 5, 6, 7], max_new_tokens=2, slo="energy-saving"),
+    ]
+    done = server.run(reqs)
+    assert all(len(r.generated) == 2 for r in done)
+
+    s = server.summary()
+    assert s["slo_classes"] == {"energy-saving": 1, "latency-critical": 1}
+    assert s["requests"] == 2
+    # one plan per (matrix, objective): two classes -> two objectives
+    assert s["session"]["requests"] == engine.stats.spmv_layers * 2
+    cells = s["energy"]
+    objectives = {k.split("/")[1] for k in cells}
+    assert objectives == {"latency", "energy"}  # each request's OWN class
+    assert all(k.endswith("/lm") for k in cells)
+    assert all(c["requests"] > 0 for c in cells.values())
+    assert "tick_latency" in s
+
+
+def test_batched_server_rejects_unknown_slo():
+    from repro.models.model import model_specs
+    from repro.models.param import init_params
+    from repro.train.serve import BatchedServer, Request, ServeConfig
+
+    cfg = TINY
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), cfg.param_dtype)
+    engine = make_engine()
+    pruned = prune_model_ffns(params, cfg, engine, density=0.1)
+    server = BatchedServer(
+        pruned, cfg, ServeConfig(batch_slots=1, max_len=64, max_new_tokens=1),
+        engine=engine,
+    )
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        server.run([Request(rid=0, prompt=[1, 2], max_new_tokens=1, slo="asap")])
+
+
+# -------------------------------------------------------- pruned-ffn suite
+def test_prunedffn_pattern_in_suite():
+    from repro.sparse.generate import (
+        MATRIX_NAMES,
+        PATTERN_NAMES,
+        SUITE,
+        generate_by_name,
+    )
+
+    assert "pruned-ffn" in SUITE
+    assert "prunedffn" in PATTERN_NAMES
+    # the paper's §6.1 selection stays exactly the 30 Table-7 matrices
+    assert "pruned-ffn" not in MATRIX_NAMES and len(MATRIX_NAMES) == 30
+
+    spec = SUITE["pruned-ffn"]
+    d = generate_by_name("pruned-ffn", scale=0.01)
+    n = d.shape[0]
+    assert d.shape == (n, n)
+    density = np.count_nonzero(d) / d.size
+    assert density == pytest.approx(min(spec.avg_nnz / n, 1.0), rel=0.05)
+    # unstructured top-k: no empty rows at this density, counts near-binomial
+    row_counts = np.count_nonzero(d, axis=1)
+    assert row_counts.min() >= 1
+    assert abs(row_counts.mean() - spec.avg_nnz) < 1.0
+    assert np.array_equal(d, generate_by_name("pruned-ffn", scale=0.01))
