@@ -1,0 +1,167 @@
+"""Observability overhead + active-SLO escalation benchmark.
+
+Study 1 (gated by ``benchmarks/compare.py``): the per-request cost of the
+observability layer. The same warm request stream is served twice through a
+``SpmvServer`` — once with tracing + metrics enabled, once under
+``set_obs_enabled(False)`` — and the compare gate bounds the ratio
+``obs_on/per_request_s`` over ``obs_off/per_request_s``: the layer must stay
+a bounded fraction of an already sub-millisecond serve path, or the "no-op
+fast path" claim in ``repro/obs`` is broken.
+
+Study 2 (the active-observability acceptance loop): a synthetic overload
+drives an SLO class's latency burn through ok→firing; while the alert fires
+the server escalates the class's requests from their native objective
+(``energy`` for the energy-saving class) to the violated dimension's
+(``latency``), and once healthy traffic cools the fast window the state
+clears and requests return to the native objective. The loop is *checked*,
+not just measured — a bench failure here means the escalation path broke.
+
+Run via ``python -m benchmarks.run --only obs_overhead`` or directly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALES, get_predictor, print_table, save_result
+from repro.core import AutoSpMV, AutoSpmvSession, OverheadPredictor, measure_overheads
+from repro.kernels.ops import clear_kernel_memo
+from repro.obs import set_obs_enabled
+from repro.obs.slo import FIRING, OK, SloConfig, SloTarget, SloTracker
+from repro.sparse.generate import MATRIX_NAMES, generate_by_name
+from repro.train.serve import SpmvRequest, SpmvServer
+from repro.utils.logging import get_logger
+
+log = get_logger("bench.obs_overhead")
+
+N_UNIQUE = 3  # distinct matrices in the pool
+REPEATS = 3  # requests per matrix per pass
+PASSES = 3  # timed passes per mode; best-of wins (noise floor)
+
+
+def _requests(scale: float, *, slo: str | None = None) -> list[SpmvRequest]:
+    rng = np.random.default_rng(0)
+    reqs = []
+    rid = 0
+    for name in MATRIX_NAMES[:N_UNIQUE]:
+        dense = generate_by_name(name, scale=scale)
+        for _ in range(REPEATS):
+            x = rng.normal(size=dense.shape[1]).astype(np.float32)
+            reqs.append(SpmvRequest(rid=rid, dense=dense, x=x, slo=slo))
+            rid += 1
+    return reqs
+
+
+def _timed_pass(server: SpmvServer, scale: float) -> float:
+    reqs = _requests(scale)
+    t0 = time.perf_counter()
+    server.run(reqs)
+    return (time.perf_counter() - t0) / len(reqs)
+
+
+def _overhead_study(tuner, scale: float) -> dict:
+    clear_kernel_memo()
+    server = SpmvServer(AutoSpmvSession(tuner))
+    server.run(_requests(scale))  # warm-up: plans + kernels off the clock
+    on_s = min(_timed_pass(server, scale) for _ in range(PASSES))
+    set_obs_enabled(False)
+    try:
+        off_s = min(_timed_pass(server, scale) for _ in range(PASSES))
+    finally:
+        set_obs_enabled(True)
+    return {
+        "obs_on": {"per_request_s": on_s},
+        "obs_off": {"per_request_s": off_s},
+        "overhead_ratio": on_s / max(off_s, 1e-12),
+    }
+
+
+def _escalation_study(tuner, scale: float) -> dict:
+    """Close acceptance loop (a): overload → firing → escalation → recovery."""
+    cfg = SloConfig(
+        fast_window=8,
+        slow_window=16,
+        min_samples=4,
+        targets={"energy-saving": SloTarget(p99_latency_s=2.0)},
+    )
+    tracker = SloTracker(cfg)
+    transitions: list[tuple[str, str]] = []
+    tracker.on_transition(lambda slo, old, new, dim: transitions.append((old, new)))
+    server = SpmvServer(AutoSpmvSession(tuner), slo=tracker)
+
+    done = server.run(_requests(scale, slo="energy-saving"))
+    healthy_obj = {r.served_objective for r in done}
+    if healthy_obj != {"energy"}:
+        raise RuntimeError(f"healthy energy-saving traffic served as {healthy_obj}")
+    if tracker.state("energy-saving") != OK:
+        raise RuntimeError("healthy traffic should not trip the latency SLO")
+
+    # synthetic overload: saturate both windows far past the p99 target
+    for _ in range(cfg.slow_window):
+        tracker.observe("energy-saving", latency_s=10.0)
+    tracker.evaluate()
+    if tracker.state("energy-saving") != FIRING:
+        raise RuntimeError("sustained overload did not drive the SLO to firing")
+    done = server.run(_requests(scale, slo="energy-saving"))
+    escalated_obj = {r.served_objective for r in done}
+    if escalated_obj != {"latency"}:
+        raise RuntimeError(f"firing latency SLO served as {escalated_obj}")
+
+    # recovery: healthy samples flush the fast window; the alert clears
+    # straight to ok (hysteresis) and requests return to the native objective
+    for _ in range(cfg.fast_window):
+        tracker.observe("energy-saving", latency_s=1e-3)
+    tracker.evaluate()
+    if tracker.state("energy-saving") != OK:
+        raise RuntimeError("healthy fast window did not clear the alert")
+    done = server.run(_requests(scale, slo="energy-saving"))
+    recovered_obj = {r.served_objective for r in done}
+    if recovered_obj != {"energy"}:
+        raise RuntimeError(f"cleared SLO still served as {recovered_obj}")
+
+    snap = tracker.snapshot()["classes"]["energy-saving"]
+    return {
+        "fired": 1,
+        "escalated": 1,
+        "recovered": 1,
+        "alerts": snap["alerts"],
+        "transitions": len(transitions),
+    }
+
+
+def run(scale_name: str = "paper") -> dict:
+    s = SCALES[scale_name]
+    predictor = get_predictor(scale_name)
+    overhead = OverheadPredictor().fit(
+        [measure_overheads(generate_by_name(n, scale=s["scale"]), n)
+         for n in MATRIX_NAMES[:4]]
+    )
+    tuner = AutoSpMV(predictor, overhead)
+
+    overhead_payload = _overhead_study(tuner, s["scale"])
+    slo_payload = _escalation_study(tuner, s["scale"])
+
+    print_table(
+        f"obs overhead: {N_UNIQUE * REPEATS} warm requests, best of {PASSES}",
+        ["mode", "per-request s", "ratio"],
+        [
+            ["obs on", overhead_payload["obs_on"]["per_request_s"],
+             overhead_payload["overhead_ratio"]],
+            ["obs off", overhead_payload["obs_off"]["per_request_s"], 1.0],
+        ],
+    )
+    log.info(
+        "obs overhead ratio %.3f; slo loop closed (alerts=%d, transitions=%d)",
+        overhead_payload["overhead_ratio"],
+        slo_payload["alerts"],
+        slo_payload["transitions"],
+    )
+    payload = {**overhead_payload, "slo": slo_payload}
+    save_result("obs_overhead", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run("ci")

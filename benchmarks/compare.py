@@ -9,7 +9,14 @@ ratios (lower = better):
 * ``fused_vs_sequential`` — the partition bench's single-launch fused
   executor over its sequential per-block dispatch;
 * ``solver_adaptive_vs_always`` — the solvers bench's per-iteration p50
-  with the adaptive SpMV↔SpMSpV policy over the always-SpMV run.
+  with the adaptive SpMV↔SpMSpV policy over the always-SpMV run;
+* ``lm_sparse_per_token`` — sparse-served decode over dense decode;
+* ``obs_overhead`` — warm serving with the observability layer on over the
+  same path with it disabled.
+
+Every check is evaluated and reported (``PASS``/``FAIL`` per line) before
+the process exits nonzero — one regression never masks another in CI logs;
+the final summary counts the failures by name.
 
 A gate fails when its current ratio is more than ``--threshold`` (default
 25%) worse than the baseline ratio AND the ratio has left the gate's
@@ -94,6 +101,17 @@ GATES = (
         # recomputed per tick), not interpret-mode jitter
         max_ok_ratio=3.0,
     ),
+    RatioGate(
+        name="obs_overhead",
+        bench="obs_overhead",
+        num_key="obs_on/per_request_s",
+        den_key="obs_off/per_request_s",
+        # the observability layer (spans + counters + energy cells + burn
+        # windows) over the identical warm serve path with obs disabled; the
+        # layer claims a no-op fast path, so it must never double the
+        # per-request cost
+        max_ok_ratio=2.0,
+    ),
 )
 
 
@@ -129,26 +147,41 @@ def fused_ratio(report: dict) -> float | None:
     return gate_ratio(report, GATES[0])[0]
 
 
+@dataclass(frozen=True)
+class Outcome:
+    """One checked thing (gate or bench-presence) and how it went.
+
+    Every outcome is evaluated and reported even after a failure — one
+    regression must never mask another in the CI log."""
+
+    name: str
+    ok: bool
+    detail: str
+
+
 def compare(
     current: dict,
     baseline: dict,
     *,
     threshold: float = 0.25,
-) -> tuple[bool, list[str]]:
-    """Returns (ok, report lines)."""
-    lines: list[str] = []
-    ok = True
+) -> tuple[bool, list[Outcome]]:
+    """Evaluate every check; returns (all ok, one outcome per check)."""
+    outcomes: list[Outcome] = []
 
     base_names = {b.get("name") for b in baseline.get("benchmarks", ())}
     cur_by_name = {b.get("name"): b for b in current.get("benchmarks", ())}
     for name in sorted(base_names):
         bench = cur_by_name.get(name)
         if bench is None:
-            ok = False
-            lines.append(f"MISSING: baseline bench {name!r} was not run")
+            outcomes.append(Outcome(
+                f"bench:{name}", False, f"baseline bench {name!r} was not run"
+            ))
         elif not bench.get("ok"):
-            ok = False
-            lines.append(f"FAILED: bench {name!r} did not pass")
+            outcomes.append(Outcome(
+                f"bench:{name}", False, f"bench {name!r} did not pass"
+            ))
+        else:
+            outcomes.append(Outcome(f"bench:{name}", True, "ran and passed"))
 
     for gate in GATES:
         base_ratio, base_problem = gate_ratio(baseline, gate)
@@ -157,39 +190,39 @@ def compare(
             # a gate the baseline cannot anchor is a hard failure: regenerate
             # the committed baseline (benchmarks/baseline/BENCH_smoke.json)
             # with the current bench set instead of silently skipping
-            ok = False
-            lines.append(
-                f"BASELINE MISSING METRIC [{gate.name}]: {base_problem}; "
-                f"regenerate the committed baseline to include "
-                f"{gate.num_key!r} and {gate.den_key!r}"
-            )
+            outcomes.append(Outcome(
+                gate.name, False,
+                f"baseline missing metric: {base_problem}; regenerate the "
+                f"committed baseline to include {gate.num_key!r} and "
+                f"{gate.den_key!r}",
+            ))
             continue
         if cur_ratio is None:
-            ok = False
-            lines.append(
-                f"REGRESSION [{gate.name}]: current run lost the "
-                f"measurement ({cur_problem})"
-            )
+            outcomes.append(Outcome(
+                gate.name, False,
+                f"current run lost the measurement ({cur_problem})",
+            ))
             continue
         rel = cur_ratio / base_ratio - 1.0
-        lines.append(
-            f"{gate.name}: ratio {cur_ratio:.4g} vs baseline "
-            f"{base_ratio:.4g} ({rel:+.1%})"
+        detail = (
+            f"ratio {cur_ratio:.4g} vs baseline {base_ratio:.4g} ({rel:+.1%})"
         )
         if rel > threshold and cur_ratio > gate.max_ok_ratio:
-            ok = False
-            lines.append(
-                f"REGRESSION [{gate.name}]: ratio degraded {rel:+.1%} "
-                f"(> {threshold:.0%}) and exceeds the absolute guard "
-                f"{gate.max_ok_ratio:g}"
-            )
+            outcomes.append(Outcome(
+                gate.name, False,
+                f"{detail}: degraded > {threshold:.0%} and exceeds the "
+                f"absolute guard {gate.max_ok_ratio:g}",
+            ))
         elif rel > threshold:
-            lines.append(
-                f"{gate.name}: degraded {rel:+.1%} but still inside the "
-                f"absolute comfort zone ({cur_ratio:.4g} <= "
-                f"{gate.max_ok_ratio:g}); treated as noise"
-            )
-    return ok, lines
+            outcomes.append(Outcome(
+                gate.name, True,
+                f"{detail}: degraded but still inside the absolute comfort "
+                f"zone ({cur_ratio:.4g} <= {gate.max_ok_ratio:g}); treated "
+                f"as noise",
+            ))
+        else:
+            outcomes.append(Outcome(gate.name, True, detail))
+    return all(o.ok for o in outcomes), outcomes
 
 
 def main(argv=None) -> int:
@@ -203,11 +236,20 @@ def main(argv=None) -> int:
 
     current = json.loads(Path(args.results).read_text())
     baseline = json.loads(Path(args.baseline).read_text())
-    ok, lines = compare(current, baseline, threshold=args.threshold)
-    for line in lines:
-        (log.info if ok else log.error)("%s", line)
-    log.info("bench regression gate: %s", "PASS" if ok else "FAIL")
-    return 0 if ok else 1
+    ok, outcomes = compare(current, baseline, threshold=args.threshold)
+    for o in outcomes:  # every outcome, pass or fail, before any exit
+        (log.info if o.ok else log.error)(
+            "%s [%s]: %s", "PASS" if o.ok else "FAIL", o.name, o.detail
+        )
+    failed = [o.name for o in outcomes if not o.ok]
+    if failed:
+        log.error(
+            "bench regression gate: FAIL (%d of %d checks): %s",
+            len(failed), len(outcomes), ", ".join(failed),
+        )
+        return 1
+    log.info("bench regression gate: PASS (%d checks)", len(outcomes))
+    return 0
 
 
 if __name__ == "__main__":

@@ -44,6 +44,8 @@ BENCHES = [
     ("partition", "benchmarks.bench_partition", "Partitioned vs monolithic SpMV"),
     ("solvers", "benchmarks.bench_solvers", "Iterative solvers + adaptive SpMSpV"),
     ("sparse_lm", "benchmarks.bench_sparse_lm", "Sparse LM serving vs dense decode"),
+    ("obs_overhead", "benchmarks.bench_obs_overhead",
+     "Observability overhead + SLO escalation loop"),
     ("fig12", "benchmarks.fig12_sensitivity", "Fig.12 hardware sensitivity"),
     ("roofline", "benchmarks.roofline", "Roofline report (dry-run artifacts)"),
     # keep last: activates the bcsr plugin, which widens the registry for the
@@ -52,7 +54,8 @@ BENCHES = [
 ]
 
 SMOKE_BENCHES = (
-    "session_cache", "adaptive", "partition", "solvers", "sparse_lm", "formats"
+    "session_cache", "adaptive", "partition", "solvers", "sparse_lm",
+    "obs_overhead", "formats",
 )
 
 _MAX_METRICS = 400  # per bench: keep the artifact readable, not exhaustive

@@ -931,6 +931,20 @@ class AutoSpmvSession:
             del self._pred_memo[key]
         return dropped
 
+    def evict_format(self, fmt: str) -> int:
+        """Invalidate every cached plan serving ``fmt`` — monolithic plans
+        whose chosen format matches, and partitioned composites carrying it
+        as any block's component. The anomaly watchdog's targeted eviction:
+        a lying cost model poisons exactly the plans scored with its
+        estimates for that format, so only those re-plan."""
+        dropped = 0
+        for entry in list(self.cache.entries()):
+            if fmt in (entry.fmt or "").split("+"):
+                dropped += self.invalidate(entry.bucket, entry.objective, entry.mode)
+        if dropped:
+            log.info("evicted %d cached plan(s) serving format %s", dropped, fmt)
+        return dropped
+
     # ----------------------------------------------------------- calibration
     def calibrate(self, *, save: bool = True, min_samples: int = 1):
         """Fit a ``CalibratedCostModel`` from accumulated telemetry.

@@ -23,6 +23,15 @@ nnz-balanced row blocks — each block independently routed through the
 format registry/predictors (``--max-blocks`` bounds the searched block
 counts); with ``--adaptive`` every (block, format) pair becomes its own
 bandit arm and drifted blocks are re-routed individually.
+
+Active-observability flags: ``--slo-config`` attaches an ``SloTracker``
+(burn-rate alerting + objective escalation; JSON overrides the per-class
+targets) in both modes — in SpMV mode requests get SLO classes via
+``--spmv-slo``; ``--anomaly`` runs the cost-model residual watchdog
+(recalibrate + targeted eviction on sustained anomaly); ``--fleet-dir`` +
+``--sync-every`` sync the bandit posterior with peer serve processes
+through a shared shard directory (``obs/sync.py``), with a final sync at
+shutdown.
 """
 
 from __future__ import annotations
@@ -85,11 +94,17 @@ def serve_lm(args) -> list[Request]:
     params = init_params(model_specs(cfg), jax.random.PRNGKey(args.seed), cfg.param_dtype)
     if args.lm_sparse:
         engine, params = _build_lm_engine(args, cfg, params)
+    slo_tracker = None
+    if args.slo_config:
+        from repro.obs.slo import SloConfig, SloTracker
+
+        slo_tracker = SloTracker(SloConfig.load(args.slo_config))
     server = BatchedServer(
         params, cfg,
         ServeConfig(batch_slots=args.slots, max_len=args.max_len,
                     max_new_tokens=args.max_new_tokens),
         engine=engine,
+        slo=slo_tracker,
     )
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -136,13 +151,17 @@ def serve_spmv(args) -> list[SpmvRequest]:
     )
     log.info("tuner ready in %.1fs", time.time() - t0)
 
+    # active-observability features imply their substrates: fleet sync needs
+    # the bandit posterior, the anomaly watchdog needs calibration pairs
+    want_adaptive = args.adaptive or args.fleet_dir is not None
     telemetry = adaptive = feedback = None
     if (
         args.telemetry
-        or args.adaptive
+        or want_adaptive
         or args.telemetry_log
         or args.refit_every > 0
         or args.calibrate_every > 0
+        or args.anomaly
     ):
         from repro.telemetry import (
             AdaptiveFormatSelector,
@@ -158,7 +177,7 @@ def serve_spmv(args) -> list[SpmvRequest]:
                 telemetry.summary(),
                 args.telemetry_log,
             )
-        if args.adaptive:
+        if want_adaptive:
             adaptive = AdaptiveFormatSelector()
             seeded = adaptive.warm_start(telemetry)
             if seeded:
@@ -178,6 +197,32 @@ def serve_spmv(args) -> list[SpmvRequest]:
     )
     if len(session.cache):
         log.info("warm start: %d cached plans from %s", len(session.cache), args.spmv_cache)
+
+    spmv_slo = args.spmv_slo or ("mixed" if args.slo_config else None)
+    slo_tracker = None
+    if spmv_slo:
+        from repro.obs.slo import SLO_CLASSES, SloConfig, SloTracker
+
+        slo_cfg = SloConfig.load(args.slo_config) if args.slo_config else SloConfig()
+        slo_tracker = SloTracker(slo_cfg)
+        log.info(
+            "slo tracking on %d class(es), windows %d/%d",
+            len(slo_cfg.targets), slo_cfg.fast_window, slo_cfg.slow_window,
+        )
+    fleet = None
+    if args.fleet_dir is not None:
+        from repro.obs.sync import FleetSync
+
+        fleet = FleetSync(
+            session,
+            args.fleet_dir,
+            instance=args.obs_instance,
+            sync_every=args.sync_every,
+        )
+        log.info(
+            "fleet sync [%s]: shard %s, every %d request(s)",
+            args.obs_instance, fleet.shard_path, args.sync_every,
+        )
     server = SpmvServer(
         session,
         feedback=feedback,
@@ -185,6 +230,9 @@ def serve_spmv(args) -> list[SpmvRequest]:
         max_blocks=args.max_blocks,
         fused=args.fused,
         calibrate_every=args.calibrate_every,
+        slo=slo_tracker,
+        anomaly=args.anomaly,
+        fleet=fleet,
     )
     if args.metrics_port is not None:
         server.start_metrics_server(args.metrics_port)
@@ -203,7 +251,12 @@ def serve_spmv(args) -> list[SpmvRequest]:
     for i in range(args.requests):
         dense = generate_by_name(str(rng.choice(pool)), scale=args.spmv_scale)
         x = rng.normal(size=dense.shape[1]).astype(np.float32)
-        reqs.append(SpmvRequest(rid=i, dense=dense, x=x, objective=args.objective))
+        slo = None
+        if spmv_slo is not None:
+            slo = SLO_CLASSES[i % len(SLO_CLASSES)] if spmv_slo == "mixed" else spmv_slo
+        reqs.append(
+            SpmvRequest(rid=i, dense=dense, x=x, objective=args.objective, slo=slo)
+        )
     if args.profile_dir:
         from repro.obs import profile_capture
 
@@ -238,6 +291,10 @@ def serve_spmv(args) -> list[SpmvRequest]:
         telemetry.flush()
         if args.telemetry_log:
             log.info("telemetry log flushed to %s", args.telemetry_log)
+    if fleet is not None:
+        # shutdown flush: export the final local posterior and absorb
+        # whatever the peers wrote since the last periodic sync
+        log.info("final fleet sync: %s", fleet.sync())
     if args.spmv_cache:
         session.save()
         log.info("tuning cache saved to %s", args.spmv_cache)
@@ -329,6 +386,28 @@ def main(argv=None):
                          "after serving (obs/aggregate.py input)")
     ap.add_argument("--obs-instance", default="serve",
                     help="instance label stamped into exported shards")
+    ap.add_argument("--slo-config", default=None,
+                    help="JSON overriding the per-class SLO targets; attaches "
+                         "burn-rate alerting + objective escalation "
+                         "(obs/slo.py) in either mode")
+    ap.add_argument("--spmv-slo", default=None,
+                    choices=["latency-critical", "power-capped", "balanced",
+                             "energy-saving", "mixed"],
+                    help="SpMV mode: SLO class stamped on requests ('mixed' "
+                         "cycles all four); defaults to 'mixed' when "
+                         "--slo-config is given")
+    ap.add_argument("--anomaly", action="store_true",
+                    help="SpMV mode: cost-model residual watchdog — on "
+                         "sustained anomaly, drop the format's calibration "
+                         "window, recalibrate, and evict its cached plans "
+                         "(implies --telemetry)")
+    ap.add_argument("--fleet-dir", default=None,
+                    help="SpMV mode: shared directory of fleet shards; the "
+                         "bandit posterior syncs with peer serve processes "
+                         "through it (implies --adaptive)")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="with --fleet-dir: sync after every N served "
+                         "requests (plus a final sync at shutdown)")
     ap.add_argument("--profile-dir", default=None,
                     help="capture the serving run with jax.profiler into "
                          "this directory (Perfetto/TensorBoard viewable)")

@@ -11,9 +11,20 @@ instead of just wall clock. Four pieces, threaded through every hot path:
   JSON snapshot + Prometheus text export;
 * ``energy``  — per-request modeled-energy / measured-latency accounting of
   the four paper objectives, per (format, objective, block);
-* ``aggregate`` — merges JSONL metric/trace shards from N server instances
-  into one fleet report; ``http`` serves ``/metrics`` + ``/healthz`` +
-  ``/obs`` from a daemon thread.
+* ``aggregate`` — merges JSONL metric/trace/posterior shards from N server
+  instances into one fleet report; ``http`` serves ``/metrics`` +
+  ``/healthz`` + ``/obs`` + ``/slo`` from a daemon thread.
+
+On top of that passive layer sits the *active* one (alerting and reacting,
+not just recording):
+
+* ``slo``     — per-SLO-class targets with SRE-style multi-window burn-rate
+  evaluation, an ok→warning→firing alert state machine, and objective
+  escalation hooks the servers consume;
+* ``anomaly`` — a cost-model residual watchdog over the recorder's
+  calibration pairs that recalibrates + evicts when the model is lying;
+* ``sync``    — live fleet posterior sync through a shared directory of
+  shards (``FleetSync`` + ``AdaptiveFormatSelector.absorb``).
 
 ``obs_enabled``/``set_obs_enabled`` gate the whole layer: disabled, a span
 is one attribute read and a metric mutation is one boolean check — the
@@ -21,8 +32,11 @@ serving path's no-op fast path.
 """
 
 from repro.obs.aggregate import merge_shards
+from repro.obs.anomaly import AnomalyConfig, CostModelWatchdog
 from repro.obs.energy import EnergyAccountant, EnergyCell
 from repro.obs.http import ObsHTTPServer
+from repro.obs.slo import SloConfig, SloTarget, SloTracker
+from repro.obs.sync import FleetSync, write_fleet_shard
 from repro.obs.metrics import (
     Counter,
     Gauge,
@@ -51,13 +65,19 @@ def obs_enabled() -> bool:
 
 
 __all__ = [
+    "AnomalyConfig",
+    "CostModelWatchdog",
     "Counter",
     "EnergyAccountant",
     "EnergyCell",
+    "FleetSync",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
     "ObsHTTPServer",
+    "SloConfig",
+    "SloTarget",
+    "SloTracker",
     "Tracer",
     "get_metrics",
     "get_tracer",
@@ -68,4 +88,5 @@ __all__ = [
     "reset_metrics",
     "set_obs_enabled",
     "span",
+    "write_fleet_shard",
 ]

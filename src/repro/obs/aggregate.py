@@ -13,7 +13,12 @@ of that logic can exist. Merge semantics:
   the concatenated recent windows* (averaging per-instance percentiles
   would be wrong for any skewed latency distribution);
 * spans    — concatenated with their source instance attached, summarized
-  per name (count, total/mean duration).
+  per name (count, total/mean duration);
+* posteriors (``obs/sync.py`` fleet shards) — per-(bucket, objective, fmt)
+  arm pulls sum and values merge pull-weighted, with each instance's
+  incumbent retained per cell (and a ``converged`` flag when they agree);
+* calibration pairs — concatenated per format (bounded), with the fleet
+  mean relative error recomputed over the merged pairs.
 
 Lines that fail to parse (torn appends, foreign schemas) are counted and
 skipped, matching the replay tolerance everywhere else in the repo.
@@ -45,23 +50,29 @@ def _labels_key(name: str, labels: dict) -> str:
 
 
 def read_shard_lines(paths: list[str | Path]) -> tuple[list[dict], int]:
-    """Parse every line of every shard; returns (records, dropped_lines)."""
+    """Parse every line of every shard; returns (records, dropped_lines).
+
+    Reads line-by-line — a fleet of long-running instances produces shards
+    far bigger than any single record, so the file never sits in memory
+    whole. Torn lines (interrupted appends, foreign schemas) are counted
+    and skipped, matching the replay tolerance everywhere else."""
     records, dropped = [], 0
     for path in paths:
-        for line in Path(path).read_text().splitlines():
-            line = line.strip()
-            if not line:
-                continue
-            try:
-                rec = json.loads(line)
-            except ValueError:
-                dropped += 1
-                continue
-            if isinstance(rec, dict):
-                rec.setdefault("_shard", str(path))
-                records.append(rec)
-            else:
-                dropped += 1
+        with open(path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except ValueError:
+                    dropped += 1
+                    continue
+                if isinstance(rec, dict):
+                    rec.setdefault("_shard", str(path))
+                    records.append(rec)
+                else:
+                    dropped += 1
     return records, dropped
 
 
@@ -73,6 +84,8 @@ def merge_shards(paths: list[str | Path]) -> dict:
     gauges: dict[str, dict] = {}
     hists: dict[str, dict] = {}
     spans: list[dict] = []
+    posteriors: dict[tuple[str, str], dict] = {}
+    calibration: dict[str, dict] = {}
 
     for rec in records:
         kind = rec.get("kind")
@@ -104,6 +117,37 @@ def merge_shards(paths: list[str | Path]) -> dict:
                 cell["count"] += int(rec.get("count") or 0)
                 cell["sum"] += float(rec.get("sum") or 0.0)
                 cell["recent"].extend(float(x) for x in rec.get("recent") or ())
+        elif kind == "posterior":  # obs/sync.py fleet-shard bandit arm
+            if rec.get("instance"):
+                instances.add(rec["instance"])
+            try:
+                pulls = int(rec["pulls"])
+                value = float(rec["value"])
+                key = (str(rec["bucket"]), str(rec["objective"]))
+                fmt = str(rec["fmt"])
+            except (KeyError, TypeError, ValueError):
+                dropped += 1
+                continue
+            cell = posteriors.setdefault(key, {"arms": {}, "incumbents": {}})
+            arm = cell["arms"].setdefault(fmt, {"pulls": 0, "weighted": 0.0})
+            arm["pulls"] += pulls
+            arm["weighted"] += value * pulls  # pull-weighted value merge
+            if rec.get("instance") and rec.get("incumbent"):
+                cell["incumbents"][rec["instance"]] = rec["incumbent"]
+        elif kind == "calibration":  # obs/sync.py (predicted, measured) pairs
+            if rec.get("instance"):
+                instances.add(rec["instance"])
+            fmt = str(rec.get("fmt", "?"))
+            cell = calibration.setdefault(fmt, {"samples": 0, "pairs": []})
+            for pair in rec.get("pairs") or ():
+                try:
+                    p, m = float(pair[0]), float(pair[1])
+                except (TypeError, ValueError, IndexError):
+                    dropped += 1
+                    continue
+                cell["samples"] += 1
+                if len(cell["pairs"]) < 256:  # bound the merged window
+                    cell["pairs"].append((p, m))
         elif "name" in rec and "dur_s" in rec:  # a trace span line
             span = dict(rec)
             span["instance"] = rec.get("instance") or rec.get("_shard", "")
@@ -138,6 +182,35 @@ def merge_shards(paths: list[str | Path]) -> dict:
             merged[f"p{int(q)}"] = _pctl(cell["recent"], q)
         merged["window_samples"] = len(cell["recent"])
         report["histograms"][key] = merged
+    if posteriors:
+        out_post = {}
+        for (bucket, objective), cell in sorted(posteriors.items()):
+            arms = {
+                fmt: {
+                    "pulls": a["pulls"],
+                    "value": a["weighted"] / a["pulls"] if a["pulls"] else math.nan,
+                }
+                for fmt, a in sorted(cell["arms"].items())
+            }
+            incumbents = dict(sorted(cell["incumbents"].items()))
+            out_post[f"{bucket}|{objective}"] = {
+                "arms": arms,
+                "pulls": sum(a["pulls"] for a in arms.values()),
+                "incumbents": incumbents,
+                "converged": len(set(incumbents.values())) <= 1,
+            }
+        report["posteriors"] = out_post
+    if calibration:
+        out_cal = {}
+        for fmt, cell in sorted(calibration.items()):
+            pairs = cell["pairs"]
+            rel = [abs(m - p) / p for p, m in pairs if p > 0]
+            out_cal[fmt] = {
+                "samples": cell["samples"],
+                "window_pairs": len(pairs),
+                "mean_rel_err": sum(rel) / len(rel) if rel else math.nan,
+            }
+        report["calibration"] = out_cal
     return report
 
 

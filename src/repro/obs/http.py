@@ -1,10 +1,14 @@
-"""Scrape surface: ``/metrics`` (Prometheus text), ``/healthz``, ``/obs``.
+"""Scrape surface: ``/metrics`` (Prometheus text), ``/healthz``, ``/obs``,
+``/slo``.
 
 A stdlib ``ThreadingHTTPServer`` on a daemon thread — no dependency, no
 event loop, good enough for a scraper hitting it once per interval. The
 serving process stays the owner of all state; the handler only *reads*
 (registry text dump, an optional ``extra`` callable for richer JSON like
-``SpmvServer.dump_obs``), so a slow scrape never blocks a request path.
+``SpmvServer.dump_obs``, an optional ``slo`` callable for the tracker's
+alert snapshot), so a slow scrape never blocks a request path. Request
+logging goes through ``utils/logging.get_logger`` at debug level — the
+stdlib default would spam stderr on every scrape.
 
 ``port=0`` binds an ephemeral port (tests and multi-instance fleets on one
 host); the bound port is available as ``server.port`` after ``start()``.
@@ -31,11 +35,13 @@ class ObsHTTPServer:
         registry: MetricsRegistry | None = None,
         *,
         extra: Callable[[], dict] | None = None,
+        slo: Callable[[], dict] | None = None,
         host: str = "127.0.0.1",
         port: int = 0,
     ):
         self.registry = registry if registry is not None else get_metrics()
         self.extra = extra
+        self.slo = slo
         outer = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -68,13 +74,35 @@ class ObsHTTPServer:
                             (json.dumps(payload, default=str) + "\n").encode(),
                             "application/json",
                         )
+                    elif path == "/slo":
+                        if outer.slo is None:
+                            self._send(
+                                404, b"no slo tracker attached\n", "text/plain"
+                            )
+                        else:
+                            self._send(
+                                200,
+                                (
+                                    json.dumps(outer.slo(), default=str) + "\n"
+                                ).encode(),
+                                "application/json",
+                            )
                     else:
                         self._send(404, b"not found\n", "text/plain")
                 except Exception as exc:  # scrape must never kill the server
                     self._send(500, f"{exc}\n".encode(), "text/plain")
 
-            def log_message(self, fmt, *args):  # route to our logger
-                log.debug("http: " + fmt, *args)
+            def log_message(self, fmt, *args):  # route to our logger; the
+                # stdlib default writes to stderr on every scrape. Format
+                # eagerly and defensively: a %-literal in a request line must
+                # not raise inside the logging machinery
+                try:
+                    msg = fmt % args
+                except (TypeError, ValueError):
+                    msg = " ".join((fmt, *map(str, args)))
+                log.debug("http: %s", msg)
+
+            log_error = log_message  # 4xx/5xx lines follow the same route
 
         self._httpd = ThreadingHTTPServer((host, port), Handler)
         self._httpd.daemon_threads = True
@@ -94,7 +122,11 @@ class ObsHTTPServer:
             target=self._httpd.serve_forever, name="obs-http", daemon=True
         )
         self._thread.start()
-        log.info("observability endpoint on %s (/metrics /healthz /obs)", self.url)
+        log.info(
+            "observability endpoint on %s (/metrics /healthz /obs%s)",
+            self.url,
+            " /slo" if self.slo is not None else "",
+        )
         return self
 
     def stop(self) -> None:

@@ -89,23 +89,43 @@ class AdaptiveConfig:
 
 @dataclass
 class ArmState:
-    stats: RollingStats  # MEASURED samples only — priors never contaminate it
-    pulls: int = 0  # real observations
+    stats: RollingStats  # LOCALLY MEASURED samples only — neither priors nor
+    # absorbed peer evidence ever contaminate it (exported fleet shards carry
+    # exactly these pulls, so fleet-merged counts stay echo-free)
+    pulls: int = 0  # real local observations
     prior_pulls: int = 0  # pseudo-pull credit from the model's estimate
     prior_value: float | None = None  # the estimate itself (UCB value until
     # the first real pull; model scale may differ from measured scale, so it
     # must never be averaged into the measured mean)
     disabled: bool = False  # conversion infeasible for this cell: never pick
+    absorbed_pulls: int = 0  # peer-measured pulls installed by absorb()
+    absorbed_value: float | None = None  # pull-weighted peer mean (measured
+    # scale, same clock as stats — peers run the same serving path)
 
     @property
     def n_eff(self) -> int:
-        return self.pulls + self.prior_pulls
+        return self.pulls + self.prior_pulls + self.absorbed_pulls
+
+    @property
+    def measured_pulls(self) -> int:
+        """Local + absorbed peer observations (prior pseudo-pulls excluded)."""
+        return self.pulls + self.absorbed_pulls
+
+    def measured_mean(self) -> float | None:
+        """Pull-weighted mean over local + absorbed measurements."""
+        n, total = 0, 0.0
+        if self.pulls:
+            n += self.pulls
+            total += self.stats.mean * self.pulls
+        if self.absorbed_pulls and self.absorbed_value is not None:
+            n += self.absorbed_pulls
+            total += self.absorbed_value * self.absorbed_pulls
+        return total / n if n else None
 
     def value(self) -> float | None:
         """Mean for UCB scoring: measured when available, else the prior."""
-        if self.pulls:
-            return self.stats.mean
-        return self.prior_value
+        measured = self.measured_mean()
+        return measured if measured is not None else self.prior_value
 
 
 @dataclass
@@ -170,9 +190,11 @@ class AdaptiveFormatSelector:
     @staticmethod
     def _best_measured(cell: CellState, min_pulls: int = 1) -> str | None:
         cands = [
-            (arm.stats.mean, fmt)
+            (arm.measured_mean(), fmt)
             for fmt, arm in cell.arms.items()
-            if arm.pulls >= min_pulls and not arm.disabled
+            if arm.measured_pulls >= min_pulls
+            and not arm.disabled
+            and arm.measured_mean() is not None
         ]
         return min(cands)[1] if cands else None
 
@@ -312,7 +334,7 @@ class AdaptiveFormatSelector:
             challenger is not None
             and challenger != cell.incumbent
             and inc_val is not None
-            and cell.arms[challenger].stats.mean
+            and cell.arms[challenger].measured_mean()
             * (1.0 + self.config.drift_threshold)
             < inc_val
         )
@@ -341,7 +363,60 @@ class AdaptiveFormatSelector:
         cell.invalidations += 1
         _M_PROMOTIONS.inc()
 
+    # ------------------------------------------------------------- fleet sync
+    def absorb(
+        self, bucket: str, objective: str, fmt: str, *, pulls: int, value: float
+    ) -> None:
+        """Install peer-measured evidence for one arm (idempotent setter).
+
+        ``pulls``/``value`` are the *cumulative* totals over the current
+        peer shard set for this arm — ``FleetSync`` recomputes them from
+        scratch each sync, so absorbing the same shards twice changes
+        nothing and a vanished peer's evidence ages out with its shard.
+        Peer evidence lands in ``absorbed_*``, never in the local ``stats``:
+        exported shards carry only locally-measured pulls, which keeps
+        fleet-merged pull counts equal to the per-instance sum (no echo
+        amplification through sync round-trips)."""
+        if pulls <= 0 or value is None or value <= 0:
+            return
+        key = (bucket, objective)
+        cell = self._cells.get(key)
+        if cell is None:
+            # a bucket this instance has never served: adopt the peer's arm
+            # as a provisional incumbent until a local plan claims the cell
+            cell = CellState(incumbent=fmt)
+            self._cells[key] = cell
+        arm = self._arm(cell, fmt)
+        arm.absorbed_pulls = int(pulls)
+        arm.absorbed_value = float(value)
+
+    def reconcile(self, bucket: str, objective: str) -> str | None:
+        """Promote the measured-best arm (local + absorbed) over the
+        incumbent when it wins by the drift margin — ``review``'s fleet
+        counterpart, minus the strike counting: peer evidence arrives in
+        batches of pulls, not one incumbent observation at a time, so a
+        single sync can carry a whole drift window's worth of proof."""
+        cell = self._cells.get((bucket, objective))
+        if cell is None:
+            return None
+        best = self._best_measured(cell, self.config.min_challenger_pulls)
+        if best is None or best == cell.incumbent:
+            return None
+        inc = cell.arms.get(cell.incumbent)
+        inc_val = inc.measured_mean() if inc is not None else None
+        if inc_val is None and inc is not None:
+            inc_val = inc.prior_value
+        best_val = cell.arms[best].measured_mean()
+        if inc_val is None or best_val * (1.0 + self.config.drift_threshold) < inc_val:
+            self.promote(bucket, objective, best)
+            return best
+        return None
+
     # ---------------------------------------------------------------- queries
+    def cells(self) -> dict[CellKey, CellState]:
+        """Live cell map (posterior export reads arms/incumbents off it)."""
+        return dict(self._cells)
+
     def incumbent(self, bucket: str, objective: str) -> str | None:
         cell = self._cells.get((bucket, objective))
         return cell.incumbent if cell is not None else None
@@ -375,5 +450,10 @@ class AdaptiveFormatSelector:
             "promoted_cells": sum(1 for c in self._cells.values() if c.promoted),
             "model_drift_strikes": sum(
                 c.model_drift_strikes for c in self._cells.values()
+            ),
+            "absorbed_pulls": sum(
+                a.absorbed_pulls
+                for c in self._cells.values()
+                for a in c.arms.values()
             ),
         }

@@ -108,6 +108,8 @@ class TelemetryRecorder:
         self._pending: list[MeasurementRecord] = []
         # must exist before _replay: replayed records fold calibration pairs
         self._calibration: dict[str, deque] = {}
+        self._calibration_totals: dict[str, int] = {}  # monotonic, survives
+        # window resets — pollers diff against it to find fresh pairs
         if self.log_path is not None and self.log_path.exists():
             self._replay(self.log_path)
 
@@ -175,6 +177,9 @@ class TelemetryRecorder:
             if pairs is None:
                 pairs = self._calibration[rec.fmt] = deque(maxlen=CALIBRATION_WINDOW)
             pairs.append((rec.predicted_s, rec.measured_s))
+            self._calibration_totals[rec.fmt] = (
+                self._calibration_totals.get(rec.fmt, 0) + 1
+            )
 
     # --------------------------------------------------------------- queries
     def arm(self, bucket: str, objective: str, fmt: str) -> ArmAggregate | None:
@@ -203,6 +208,28 @@ class TelemetryRecorder:
         if fmt is not None:
             return list(self._calibration.get(fmt, ()))
         return {f: list(pairs) for f, pairs in self._calibration.items()}
+
+    def calibration_totals(self) -> dict[str, int]:
+        """Monotonic per-format count of calibration pairs ever folded.
+
+        ``calibration_samples`` is a bounded window, so a poller (the
+        ``obs/anomaly.py`` watchdog) cannot tell fresh pairs from ones it
+        already judged; diffing against these totals can. Window resets do
+        not rewind them."""
+        return dict(self._calibration_totals)
+
+    def reset_calibration(self, fmt: str | None = None) -> int:
+        """Drop the windowed calibration pairs (one format, or all).
+
+        The anomaly watchdog calls this when a format's residuals say its
+        pairs were produced by a lying cost model — the next
+        ``fit_from_telemetry`` must not least-squares over the lying era.
+        Returns the number of pairs dropped; totals stay monotonic."""
+        if fmt is not None:
+            return len(self._calibration.pop(fmt, ()))
+        dropped = sum(len(p) for p in self._calibration.values())
+        self._calibration.clear()
+        return dropped
 
     def total_observations(self) -> int:
         return sum(a.stats.count for a in self._arms.values())

@@ -81,12 +81,14 @@ class BatchedServer:
     """
 
     def __init__(
-        self, params: Any, cfg: ModelConfig, sc: ServeConfig, *, engine=None
+        self, params: Any, cfg: ModelConfig, sc: ServeConfig, *, engine=None,
+        slo=None,  # optional repro.obs.slo.SloTracker
     ):
         self.params = params
         self.cfg = cfg
         self.sc = sc
         self.engine = engine
+        self.slo = slo
         self.cache = init_cache(cfg, sc.batch_slots, sc.max_len)
         self.slot_req: list[Request | None] = [None] * sc.batch_slots
         self.slot_pos = np.zeros(sc.batch_slots, np.int32)
@@ -132,6 +134,10 @@ class BatchedServer:
         active = {r.slo for r in self.slot_req if r is not None}
         for slo in SLO_PRIORITY:
             if slo in active:
+                if self.slo is not None:
+                    # a firing class drags the shared tick to the violated
+                    # dimension's objective until the burn clears
+                    return self.slo.effective_objective(slo)
                 return slo_objective(slo)
         return self.sc.objective
 
@@ -158,9 +164,21 @@ class BatchedServer:
                 toks[i, 0] = r.generated[-1]
         pos = jnp.asarray(self.slot_pos[:, None])
         if self.engine is None:
+            t0 = time.perf_counter()
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(toks), pos
             )
+            if self.slo is not None:
+                # dense decode has no per-objective engine to escalate, but
+                # the burn-rate windows still need the measured latency —
+                # a tracker that never sees samples can never alert
+                logits = jax.block_until_ready(logits)
+                dt = time.perf_counter() - t0
+                active = [r for r in self.slot_req if r is not None]
+                share = dt / max(len(active), 1)
+                for r in active:
+                    self.slo.observe(r.slo, latency_s=share)
+                self.slo.evaluate()
         else:
             objective = self._tick_objective()
             t0 = time.perf_counter()
@@ -210,6 +228,12 @@ class BatchedServer:
                 modeled=modeled,
                 block="lm",
             )
+            if self.slo is not None:
+                self.slo.observe(
+                    r.slo, latency_s=share, energy_j=modeled.get("energy")
+                )
+        if self.slo is not None:
+            self.slo.evaluate()
 
     # ------------------------------------------------------------------- run
     def run(self, requests: list[Request]) -> list[Request]:
@@ -234,6 +258,8 @@ class BatchedServer:
             "ticks": self.ticks,
             "slo_classes": dict(sorted(self._slo_counts.items())),
         }
+        if self.slo is not None:
+            out["slo"] = self.slo.snapshot()
         if self.engine is not None:
             out["engine"] = self.engine.summary()
             out["session"] = self.engine.session.stats.as_dict()
@@ -262,6 +288,8 @@ class SpmvRequest:
     dense: np.ndarray
     x: np.ndarray
     objective: str = "latency"
+    slo: str | None = None  # SLO class; when set, the served objective is
+    # resolved through the tracker (native, or escalated while firing)
     # outputs
     y: np.ndarray | None = None
     schedule: Any = None  # KernelSchedule the session picked
@@ -269,6 +297,7 @@ class SpmvRequest:
     cache_hit: bool = False  # plan came from the session cache
     exploratory: bool = False  # served off-incumbent by the bandit
     latency_s: float = 0.0
+    served_objective: str | None = None  # what the request actually ran under
 
 
 class SpmvServer:
@@ -292,6 +321,9 @@ class SpmvServer:
         max_blocks: int = 8,
         fused: bool = False,
         calibrate_every: int = 0,
+        slo=None,  # optional repro.obs.slo.SloTracker
+        anomaly: bool = False,  # attach a CostModelWatchdog (needs telemetry)
+        fleet=None,  # optional repro.obs.sync.FleetSync
     ):
         self.session = session
         # default: take the observed path whenever the session can consume
@@ -320,6 +352,24 @@ class SpmvServer:
         self.metrics = get_metrics()
         self.energy = EnergyAccountant(self.metrics)
         self._obs_http: ObsHTTPServer | None = None
+        # active observability: burn-rate alerting + escalation, cost-model
+        # residual watchdog, live fleet posterior sync — all evaluated once
+        # per served batch
+        self.slo = slo
+        self.fleet = fleet
+        self.watchdog = None
+        if anomaly:
+            from repro.obs.anomaly import CostModelWatchdog
+
+            self.watchdog = CostModelWatchdog(session)
+        self.anomaly_fires = 0
+
+    def _resolve_objective(self, req: SpmvRequest) -> str:
+        if req.slo is None:
+            return req.objective
+        if self.slo is not None:
+            return self.slo.effective_objective(req.slo)
+        return slo_objective(req.slo)
 
     def _account(
         self,
@@ -329,8 +379,10 @@ class SpmvServer:
         modeled: dict | None,
         *,
         block: str = "",
+        slo: str | None = None,
     ) -> None:
-        """Fold one served execution into counters/histograms/energy cells."""
+        """Fold one served execution into counters/histograms/energy cells
+        (and, when the request carries an SLO class, its burn windows)."""
         self.metrics.counter("spmv_requests_total", fmt=fmt, objective=objective).inc()
         self.metrics.histogram(
             "spmv_request_latency_seconds", objective=objective
@@ -342,6 +394,12 @@ class SpmvServer:
             modeled=modeled,
             block=block,
         )
+        if self.slo is not None and slo is not None:
+            self.slo.observe(
+                slo,
+                latency_s=measured_s,
+                energy_j=(modeled or {}).get("energy"),
+            )
 
     def _run_observed(self, objective: str, group: list[SpmvRequest]) -> None:
         """Per-request serve + measure + observe (telemetry/adaptive mode).
@@ -363,7 +421,7 @@ class SpmvServer:
                 req.exploratory = plan.exploratory
                 req.latency_s = dt
                 self.session.observe(plan, dt)
-                self._account(objective, plan.fmt, dt, plan.predicted)
+                self._account(objective, plan.fmt, dt, plan.predicted, slo=req.slo)
         if self.feedback is not None:
             refit = self.feedback.maybe_refit(self.session.tuner.predictor)
             if refit:
@@ -411,7 +469,9 @@ class SpmvServer:
                 req.cache_hit = res.cache_hit
                 req.exploratory = any(res.exploratory)
                 req.latency_s = dt
-                self._account(objective, req.fmt, dt, res.plan.modeled.as_dict())
+                self._account(
+                    objective, req.fmt, dt, res.plan.modeled.as_dict(), slo=req.slo
+                )
         if self.feedback is not None:
             refit = self.feedback.maybe_refit(self.session.tuner.predictor)
             if refit:
@@ -420,7 +480,10 @@ class SpmvServer:
     def run(self, requests: list[SpmvRequest]) -> list[SpmvRequest]:
         by_objective: dict[str, list[SpmvRequest]] = {}
         for r in requests:
-            by_objective.setdefault(r.objective, []).append(r)
+            # SLO-classed requests resolve through the tracker: the class's
+            # native objective, or the violated dimension's while firing
+            r.served_objective = self._resolve_objective(r)
+            by_objective.setdefault(r.served_objective, []).append(r)
         for objective, group in by_objective.items():
             if self.partition:
                 self._run_partitioned(objective, group)
@@ -450,7 +513,8 @@ class SpmvServer:
                     req.cache_hit = key in seen_keys
                     seen_keys.add(key)
                     self._account(
-                        objective, default_format(), exec_s, res.predicted
+                        objective, default_format(), exec_s, res.predicted,
+                        slo=req.slo,
                     )
             # latency covers this group's tuning + execution only, not other
             # objective groups tuned later in the same batch
@@ -468,6 +532,17 @@ class SpmvServer:
             self.session.calibrate()
             self.calibrations += 1
             self._served_since_calibration = 0
+        # active observability, once per batch: advance the alert state
+        # machines, let the residual watchdog judge fresh calibration pairs,
+        # and sync the fleet posterior when the request budget says so
+        if self.slo is not None:
+            self.slo.evaluate()
+        if self.watchdog is not None:
+            fired = self.watchdog.poll()
+            if fired:
+                self.anomaly_fires += len(fired)
+        if self.fleet is not None:
+            self.fleet.maybe_sync(len(requests))
         log.info(
             "spmv batch: %d requests, %d unique kernels compiled so far, %s",
             len(requests),
@@ -492,6 +567,12 @@ class SpmvServer:
             out["refits"] = self.feedback.refits
         if self.calibrate_every > 0:
             out["calibrations"] = self.calibrations
+        if self.slo is not None:
+            out["slo"] = self.slo.snapshot()
+        if self.watchdog is not None:
+            out["anomaly"] = self.watchdog.summary()
+        if self.fleet is not None:
+            out["fleet"] = self.fleet.summary()
         latency: dict[str, dict] = {}
         for hist in self.metrics.instruments("histogram", "spmv_request_latency_seconds"):
             if not hist.count:
@@ -537,10 +618,15 @@ class SpmvServer:
     def start_metrics_server(
         self, port: int = 0, *, host: str = "127.0.0.1"
     ) -> ObsHTTPServer:
-        """Serve ``/metrics`` + ``/healthz`` + ``/obs`` from a daemon thread."""
+        """Serve ``/metrics`` + ``/healthz`` + ``/obs`` (+ ``/slo`` when a
+        tracker is attached) from a daemon thread."""
         if self._obs_http is None:
             self._obs_http = ObsHTTPServer(
-                self.metrics, extra=self.summary, host=host, port=port
+                self.metrics,
+                extra=self.summary,
+                slo=self.slo.snapshot if self.slo is not None else None,
+                host=host,
+                port=port,
             )
             self._obs_http.start()
             log.info("metrics endpoint at %s/metrics", self._obs_http.url)

@@ -95,6 +95,14 @@ class RollingStats:
     def percentile(self, q: float) -> float:
         return percentile(self._recent, q)
 
+    def window_mean(self) -> float:
+        """Mean over the last ``window`` samples only (NaN when empty) — the
+        short-horizon signal burn-rate windows need, where the all-time
+        ``mean`` would dilute a fresh overload with ancient history."""
+        if not self._recent:
+            return math.nan
+        return sum(self._recent) / len(self._recent)
+
     def window_min(self) -> float:
         return min(self._recent) if self._recent else math.nan
 

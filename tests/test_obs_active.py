@@ -1,0 +1,595 @@
+"""Active observability: SLO burn-rate alerting (config loading, burn math,
+the ok→warning→firing machine with hysteresis, objective escalation, the
+``/slo`` scrape), the cost-model residual watchdog's fire→recalibrate→evict
+loop with MRE recovery, fleet posterior sync (no-echo shards, idempotent
+absorption, reconcile promotion, aggregate merging), and the concurrency of
+the scrape/export surfaces under live accounting."""
+
+import json
+import math
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.objectives import CalibratedCostModel, FormatCalibration
+from repro.core.session import AutoSpmvSession
+from repro.obs import set_obs_enabled
+from repro.obs.aggregate import merge_shards, read_shard_lines
+from repro.obs.anomaly import AnomalyConfig, CostModelWatchdog
+from repro.obs.http import ObsHTTPServer
+from repro.obs.metrics import get_metrics, reset_metrics
+from repro.obs.slo import (
+    DEFAULT_TARGETS,
+    FIRING,
+    OK,
+    SLO_CLASSES,
+    WARNING,
+    SloConfig,
+    SloTarget,
+    SloTracker,
+)
+from repro.obs.sync import FleetSync, posterior_lines, write_fleet_shard
+from repro.obs.trace import Tracer, get_tracer, load_spans
+from repro.telemetry import AdaptiveFormatSelector, TelemetryRecorder
+from repro.train.serve import SpmvRequest, SpmvServer
+from repro.utils.timing import RollingStats
+
+from tests.test_partition import hetero_matrix, stub_tuner
+from tests.test_telemetry import _fake_tuner, _mat
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Process-global tracer/registry: isolate every test, leave obs on."""
+    set_obs_enabled(True)
+    get_tracer().clear()
+    reset_metrics()
+    yield
+    set_obs_enabled(True)
+    get_tracer().clear()
+    reset_metrics()
+
+
+# ------------------------------------------------------------------- helpers
+
+
+def _power_only_config(**over) -> SloConfig:
+    """A single-dimension (power) config: mean-based burn makes the
+    warning/firing boundary exactly computable in tests."""
+    kw = dict(
+        fast_window=8,
+        slow_window=64,
+        min_samples=4,
+        targets={"power-capped": SloTarget(avg_power_w=100.0)},
+    )
+    kw.update(over)
+    return SloConfig(**kw)
+
+
+# -------------------------------------------------------------------- config
+
+
+def test_slo_config_load_merges_over_defaults(tmp_path):
+    path = tmp_path / "slo.json"
+    path.write_text(json.dumps({
+        "fast_window": 16,
+        "fire_burn": 1.5,
+        "targets": {"latency-critical": {"p99_latency_s": 0.05}},
+    }))
+    cfg = SloConfig.load(path)
+    assert cfg.fast_window == 16 and cfg.fire_burn == 1.5
+    assert cfg.slow_window == SloConfig().slow_window  # untouched default
+    assert cfg.targets["latency-critical"].p99_latency_s == 0.05
+    # the other classes keep their defaults
+    assert cfg.targets["energy-saving"] == DEFAULT_TARGETS["energy-saving"]
+
+
+@pytest.mark.parametrize("raw", [
+    {"fats_window": 16},                                   # typo'd scalar
+    {"targets": {"latency-critcal": {"p99_latency_s": 1}}},  # typo'd class
+    {"targets": {"balanced": {"p99_latency": 1.0}}},       # typo'd field
+])
+def test_slo_config_rejects_unknown_keys(tmp_path, raw):
+    path = tmp_path / "slo.json"
+    path.write_text(json.dumps(raw))
+    with pytest.raises(ValueError):
+        SloConfig.load(path)
+
+
+def test_default_targets_track_every_class():
+    tracker = SloTracker(SloConfig())
+    for slo in SLO_CLASSES:
+        assert tracker.state(slo) == OK
+        assert slo in tracker.snapshot()["classes"]
+
+
+# ----------------------------------------------------------------- burn math
+
+
+def test_rolling_stats_window_mean():
+    rs = RollingStats(window=4)
+    assert math.isnan(rs.window_mean())
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        rs.add(v)
+    # the last `window` samples only, not the all-time mean
+    assert rs.window_mean() == pytest.approx((2 + 3 + 4 + 5) / 4)
+    assert rs.mean == pytest.approx(3.0)
+
+
+def test_burn_rates_latency_p99_and_power_mean():
+    cfg = SloConfig(
+        fast_window=8, slow_window=16, min_samples=4,
+        targets={"balanced": SloTarget(p99_latency_s=1.0, avg_power_w=100.0)},
+    )
+    tracker = SloTracker(cfg)
+    for _ in range(8):
+        tracker.observe("balanced", latency_s=0.5, power_w=50.0)
+    burns = tracker.burn_rates("balanced")
+    assert burns["latency"]["fast"] == pytest.approx(0.5)  # p99/target
+    assert burns["power"]["fast"] == pytest.approx(0.5)  # mean/cap
+    # power defaults to energy/latency when not given explicitly
+    tracker2 = SloTracker(cfg)
+    for _ in range(8):
+        tracker2.observe("balanced", latency_s=0.5, energy_j=40.0)
+    assert tracker2.burn_rates("balanced")["power"]["fast"] == pytest.approx(0.8)
+
+
+# -------------------------------------------------------------- state machine
+
+
+def test_ok_warning_firing_and_hysteresis():
+    cfg = _power_only_config()
+    tracker = SloTracker(cfg)
+    seen = []
+    tracker.on_transition(lambda slo, old, new, dim: seen.append((old, new, dim)))
+
+    def feed(power, n):
+        for _ in range(n):
+            tracker.observe("power-capped", latency_s=0.1, power_w=power)
+        return tracker.evaluate()
+
+    feed(50.0, 64)  # healthy history fills the slow window
+    assert tracker.state("power-capped") == OK
+    # spike: fast window hot (mean 200), slow still cool -> warning only
+    feed(200.0, 8)
+    assert tracker.state("power-capped") == WARNING
+    # sustained: slow mean crosses the cap too -> firing, on the power dim
+    feed(200.0, 40)
+    assert tracker.state("power-capped") == FIRING
+    snap = tracker.snapshot()["classes"]["power-capped"]
+    assert snap["firing_dimension"] == "power" and snap["alerts"] == 1
+    # hysteresis: fast burn 0.9 is below fire but above warn -> still firing
+    feed(90.0, 8)
+    assert tracker.state("power-capped") == FIRING
+    # cooled below the warning threshold -> straight to ok, no warning stop
+    feed(10.0, 8)
+    assert tracker.state("power-capped") == OK
+    assert [(o, n) for o, n, _ in seen] == [
+        (OK, WARNING), (WARNING, FIRING), (FIRING, OK),
+    ]
+    # entering firing counted exactly once
+    counters = {
+        c.labels: c.value
+        for c in get_metrics().instruments("counter", "slo_alerts_total")
+    }
+    assert counters[(("slo", "power-capped"),)] == 1
+
+
+def test_effective_objective_escalates_only_while_firing():
+    cfg = SloConfig(
+        fast_window=4, slow_window=8, min_samples=2,
+        targets={"energy-saving": SloTarget(p99_latency_s=1.0)},
+    )
+    tracker = SloTracker(cfg)
+    assert tracker.effective_objective("energy-saving") == "energy"
+    for _ in range(8):
+        tracker.observe("energy-saving", latency_s=5.0)
+    tracker.evaluate()
+    assert tracker.state("energy-saving") == FIRING
+    assert tracker.effective_objective("energy-saving") == "latency"
+    esc = [
+        c.value
+        for c in get_metrics().instruments(
+            "counter", "slo_escalated_requests_total"
+        )
+    ]
+    assert esc == [1]
+    # recovery: healthy samples flush the fast window, the alert clears
+    for _ in range(4):
+        tracker.observe("energy-saving", latency_s=0.01)
+    tracker.evaluate()
+    assert tracker.state("energy-saving") == OK
+    assert tracker.effective_objective("energy-saving") == "energy"
+
+
+def test_untracked_class_is_always_ok():
+    tracker = SloTracker(_power_only_config())
+    tracker.observe("balanced", latency_s=99.0)  # silently ignored
+    assert tracker.state("balanced") == OK
+    # never escalates: the class's native objective always wins
+    assert tracker.effective_objective("balanced") == "efficiency"
+
+
+# ------------------------------------------------------------- /slo endpoint
+
+
+def test_slo_endpoint_serves_tracker_snapshot():
+    tracker = SloTracker(_power_only_config())
+    for _ in range(8):
+        tracker.observe("power-capped", latency_s=0.1, power_w=250.0)
+    tracker.evaluate()
+    server = ObsHTTPServer(slo=tracker.snapshot).start()
+    try:
+        with urllib.request.urlopen(f"{server.url}/slo", timeout=5) as resp:
+            assert resp.status == 200
+            payload = json.loads(resp.read())
+        assert payload["classes"]["power-capped"]["state"] == FIRING
+        assert payload["config"]["fast_window"] == 8
+    finally:
+        server.stop()
+
+
+def test_slo_endpoint_404_without_tracker():
+    server = ObsHTTPServer().start()
+    try:
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(f"{server.url}/slo", timeout=5)
+        assert e.value.code == 404
+    finally:
+        server.stop()
+
+
+# --------------------------------------------------- server escalation (e2e)
+
+
+def test_server_escalates_slo_classed_requests():
+    cfg = SloConfig(
+        fast_window=4, slow_window=8, min_samples=2,
+        targets={"energy-saving": SloTarget(p99_latency_s=1.0)},
+    )
+    tracker = SloTracker(cfg)
+    server = SpmvServer(AutoSpmvSession(_fake_tuner()), slo=tracker)
+
+    def batch():
+        dense = _mat()
+        x = np.ones(dense.shape[1], np.float32)
+        return [SpmvRequest(rid=0, dense=dense, x=x, slo="energy-saving")]
+
+    done = server.run(batch())
+    assert done[0].served_objective == "energy"
+    # synthetic overload: the class's latency SLO goes to firing
+    for _ in range(8):
+        tracker.observe("energy-saving", latency_s=5.0)
+    tracker.evaluate()
+    done = server.run(batch())
+    assert done[0].served_objective == "latency"
+    assert server.summary()["slo"]["classes"]["energy-saving"]["alerts"] == 1
+
+
+# ------------------------------------------------------------------ watchdog
+
+
+def _healthy_pairs(rng, n=12, scale=2.0, noise=0.03):
+    """(predicted, measured) pairs from a well-behaved affine relation."""
+    preds = 1e-4 * (1 + rng.random(n) * 10)
+    meas = scale * preds * (1 + noise * rng.standard_normal(n))
+    return list(zip(preds.tolist(), np.abs(meas).tolist()))
+
+
+def _feed(recorder, fmt, pairs):
+    for p, m in pairs:
+        recorder.observe(
+            bucket="b", objective="latency", fmt=fmt, measured_s=m, predicted_s=p
+        )
+
+
+def test_watchdog_stays_quiet_on_healthy_residuals():
+    session = AutoSpmvSession(stub_tuner(), telemetry=TelemetryRecorder())
+    dog = CostModelWatchdog(session, AnomalyConfig(min_samples=4, sustain=2))
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        _feed(session.telemetry, "csr", _healthy_pairs(rng))
+        assert dog.poll() == []
+    st = dog.summary()["formats"]["csr"]
+    assert st["anomalies"] == 0 and st["baseline_samples"] > 0
+
+
+def test_watchdog_requires_telemetry():
+    with pytest.raises(ValueError):
+        CostModelWatchdog(AutoSpmvSession(stub_tuner()))
+
+
+def test_watchdog_fire_recalibrate_mre_recovers():
+    """Acceptance loop (b): a corrupted cost model floods the calibration
+    stream with lying predictions; the watchdog fires, drops the poisoned
+    window, recalibrates (base-model fallback), evicts the format's cached
+    plans — and after healthy traffic returns, the refit MRE lands within
+    2x of the pre-corruption fit."""
+    session = AutoSpmvSession(stub_tuner(), telemetry=TelemetryRecorder())
+    dog = CostModelWatchdog(
+        session, AnomalyConfig(min_samples=4, sustain=2, rel_threshold=0.5)
+    )
+    rng = np.random.default_rng(1)
+
+    # a real cached plan for the format under test (monolithic csr fallback)
+    res = session.partitioned_optimize(hetero_matrix(256), "latency")
+    assert session.cache.peek(res.bucket, "latency", res.mode) is not None
+
+    # healthy era: learn the baseline, fit the reference calibration
+    for _ in range(3):
+        _feed(session.telemetry, "csr", _healthy_pairs(rng))
+        assert dog.poll() == []
+    mre_healthy = session.calibrate(save=False).corrections["csr"].mean_rel_err
+
+    # corruption: predictions shrink 100x (a lying CalibratedCostModel),
+    # so |measured - predicted| / predicted explodes
+    lying = [(p / 100.0, m) for p, m in _healthy_pairs(rng)]
+    _feed(session.telemetry, "csr", lying[:6])
+    assert dog.poll() == []  # strike one: anomalous but not yet sustained
+    _feed(session.telemetry, "csr", lying[6:])
+    assert dog.poll() == ["csr"]
+
+    # the fire dropped the poisoned window, recalibrated, and evicted
+    assert session.telemetry.calibration_samples("csr") == []
+    assert "csr" not in session.cost_model.corrections  # base-model fallback
+    assert session.cache.peek(res.bucket, "latency", res.mode) is None
+    assert dog.recalibrations == 1
+    assert dog.summary()["formats"]["csr"]["anomalies"] == 1
+
+    # recovery: healthy pairs only (the reset guarantees no lying-era pair
+    # can be least-squares'd into this fit)
+    for _ in range(3):
+        _feed(session.telemetry, "csr", _healthy_pairs(rng))
+        assert dog.poll() == []
+    mre_recovered = session.calibrate(save=False).corrections["csr"].mean_rel_err
+    assert mre_recovered <= 2.0 * max(mre_healthy, 1e-9)
+
+
+def test_server_wires_watchdog_and_counts_fires():
+    session = AutoSpmvSession(stub_tuner(), telemetry=TelemetryRecorder())
+    server = SpmvServer(session, anomaly=True)
+    assert server.watchdog is not None
+    rng = np.random.default_rng(2)
+    for _ in range(3):
+        _feed(session.telemetry, "ell", _healthy_pairs(rng))
+        server.watchdog.poll()
+    _feed(session.telemetry, "ell", [(p / 100, m) for p, m in _healthy_pairs(rng)])
+    server.watchdog.poll()
+    _feed(session.telemetry, "ell", [(p / 100, m) for p, m in _healthy_pairs(rng)])
+    assert server.watchdog.poll() == ["ell"]
+    assert server.summary()["anomaly"]["recalibrations"] == 1
+
+
+# ---------------------------------------------------------------- fleet sync
+
+
+def _measured_selector(updates: dict[str, list[float]]) -> AdaptiveFormatSelector:
+    sel = AdaptiveFormatSelector()
+    for fmt, times in updates.items():
+        for t in times:
+            sel.update("b1", "latency", fmt, t)
+    return sel
+
+
+def test_posterior_lines_export_local_pulls_only():
+    sel = _measured_selector({"csr": [1.0, 1.2]})
+    sel.absorb("b1", "latency", "ell", pulls=50, value=0.5)  # peer evidence
+    recs = [json.loads(line) for line in posterior_lines(sel, "a")]
+    # only the locally measured arm is exported — absorbed evidence must
+    # never echo back into the fleet
+    assert [(r["fmt"], r["pulls"]) for r in recs] == [("csr", 2)]
+    assert recs[0]["value"] == pytest.approx(1.1)
+    assert recs[0]["instance"] == "a"
+
+
+def test_absorb_is_idempotent_and_reconcile_promotes():
+    sel = _measured_selector({"ell": [1.0] * 4})
+    assert sel.incumbent("b1", "latency") == "ell"
+    for _ in range(3):  # re-absorbing the same shard set changes nothing
+        sel.absorb("b1", "latency", "csr", pulls=5, value=0.1)
+    cell = sel.cells()[("b1", "latency")]
+    assert cell.arms["csr"].absorbed_pulls == 5
+    assert cell.arms["csr"].pulls == 0  # local stats untouched
+    assert sel.reconcile("b1", "latency") == "csr"
+    assert sel.incumbent("b1", "latency") == "csr"
+    assert sel.reconcile("b1", "latency") is None  # already the incumbent
+
+
+def test_absorb_unseen_bucket_adopts_provisional_incumbent():
+    sel = AdaptiveFormatSelector()
+    sel.absorb("b9", "latency", "sell", pulls=3, value=0.2)
+    assert sel.incumbent("b9", "latency") == "sell"
+    sel.absorb("b9", "latency", "bad", pulls=0, value=0.0)  # rejected
+    assert "bad" not in sel.cells()[("b9", "latency")].arms
+
+
+def test_fleet_shard_roundtrip_and_aggregate_merge(tmp_path):
+    sel_a = _measured_selector({"csr": [1.0] * 3, "ell": [2.0]})
+    sel_b = _measured_selector({"csr": [1.1] * 5})
+    rec = TelemetryRecorder()
+    rec.observe(bucket="b1", objective="latency", fmt="csr",
+                measured_s=2e-4, predicted_s=1e-4)
+    a = tmp_path / "shard-a.jsonl"
+    b = tmp_path / "shard-b.jsonl"
+    write_fleet_shard(a, selector=sel_a, recorder=rec, instance="a")
+    write_fleet_shard(b, selector=sel_b, instance="b")
+
+    report = merge_shards([a, b])
+    post = report["posteriors"]["b1|latency"]
+    # merged pulls are exactly the per-instance sums
+    assert post["arms"]["csr"]["pulls"] == 3 + 5
+    assert post["arms"]["ell"]["pulls"] == 1
+    assert post["pulls"] == 9
+    # values merge pull-weighted
+    assert post["arms"]["csr"]["value"] == pytest.approx(
+        (1.0 * 3 + 1.1 * 5) / 8
+    )
+    assert post["incumbents"] == {"a": "csr", "b": "csr"}
+    assert post["converged"] is True
+    assert report["calibration"]["csr"]["samples"] == 1
+    assert report["instances"] == ["a", "b"]
+
+
+def test_fleet_sync_two_instances_converge(tmp_path):
+    """Acceptance loop (c): two instances sharing a fleet dir end with
+    identical incumbents and the merged posterior's pulls equal to the
+    per-instance sum — evidence is shared, never echoed or amplified."""
+    fleet_dir = tmp_path / "fleet"
+
+    def instance(name, updates):
+        session = AutoSpmvSession(
+            _fake_tuner(),
+            telemetry=TelemetryRecorder(),
+            adaptive=_measured_selector(updates),
+        )
+        return FleetSync(session, fleet_dir, instance=name)
+
+    # A measured csr fast; B only ever measured ell (slow)
+    a = instance("a", {"csr": [0.001] * 4})
+    b = instance("b", {"ell": [0.010] * 4})
+
+    a.sync()                   # A exports; no peers yet
+    stats_b = b.sync()         # B absorbs A's csr evidence -> promotion
+    assert stats_b["peers"] == 1 and stats_b["promotions"] == 1
+    assert b.session.adaptive.incumbent("b1", "latency") == "csr"
+    stats_a = a.sync()         # A absorbs B's ell arm; csr stays incumbent
+    assert stats_a["peers"] == 1 and stats_a["promotions"] == 0
+    assert a.session.adaptive.incumbent("b1", "latency") == "csr"
+
+    # repeated syncing is idempotent: absorbed totals are setters
+    for _ in range(2):
+        a.sync()
+        b.sync()
+    cell_a = a.session.adaptive.cells()[("b1", "latency")]
+    cell_b = b.session.adaptive.cells()[("b1", "latency")]
+    assert cell_a.arms["ell"].absorbed_pulls == 4
+    assert cell_b.arms["csr"].absorbed_pulls == 4
+
+    # every shard still carries only its instance's own measurements, so
+    # the fleet-merged pulls are exactly the per-instance sum
+    report = merge_shards(sorted(fleet_dir.glob("shard-*.jsonl")))
+    post = report["posteriors"]["b1|latency"]
+    assert post["arms"]["csr"]["pulls"] == 4
+    assert post["arms"]["ell"]["pulls"] == 4
+    assert post["pulls"] == 8
+    assert post["converged"] is True
+    assert set(post["incumbents"].values()) == {"csr"}
+
+
+def test_fleet_sync_requires_adaptive(tmp_path):
+    session = AutoSpmvSession(_fake_tuner(), telemetry=TelemetryRecorder())
+    with pytest.raises(ValueError):
+        FleetSync(session, tmp_path / "fleet")
+
+
+def test_maybe_sync_counts_served_requests(tmp_path):
+    session = AutoSpmvSession(_fake_tuner(), adaptive=AdaptiveFormatSelector())
+    fleet = FleetSync(session, tmp_path / "fleet", instance="a", sync_every=4)
+    assert fleet.maybe_sync(3) is None
+    assert fleet.maybe_sync(1) is not None  # 4th request triggers
+    assert fleet.syncs == 1
+    assert fleet.shard_path.exists()
+
+
+def test_read_shard_lines_streams_and_counts_torn_lines(tmp_path):
+    path = tmp_path / "shard.jsonl"
+    good = [json.dumps({"kind": "counter", "name": "x", "value": i}) for i in range(3)]
+    path.write_text("\n".join(good + ['{"torn": tru', ""]) + "\n")
+    records, dropped = read_shard_lines([path])
+    assert len(records) == 3 and dropped == 1
+
+
+# --------------------------------------------------------------- concurrency
+
+
+def test_scrape_surfaces_survive_concurrent_accounting():
+    """/metrics and /slo scraped from multiple threads while the serving
+    thread keeps mutating the registry and the tracker's windows."""
+    registry = get_metrics()
+    tracker = SloTracker(_power_only_config())
+    server = ObsHTTPServer(registry, slo=tracker.snapshot).start()
+    stop = threading.Event()
+    errors: list[Exception] = []
+
+    def scrape(path, parse):
+        try:
+            while not stop.is_set():
+                with urllib.request.urlopen(f"{server.url}{path}", timeout=5) as r:
+                    assert r.status == 200
+                    parse(r.read())
+        except Exception as exc:  # surfaced after join
+            errors.append(exc)
+
+    threads = [
+        threading.Thread(target=scrape, args=("/metrics", lambda b: b.decode())),
+        threading.Thread(target=scrape, args=("/metrics", lambda b: b.decode())),
+        threading.Thread(target=scrape, args=("/slo", json.loads)),
+        threading.Thread(target=scrape, args=("/slo", json.loads)),
+    ]
+    try:
+        for t in threads:
+            t.start()
+        for i in range(300):  # the accounting hot loop
+            registry.counter("spmv_requests_total", fmt="csr").inc()
+            registry.histogram("spmv_request_latency_seconds").observe(1e-3 * i)
+            tracker.observe("power-capped", latency_s=1e-3, power_w=float(i % 200))
+            if i % 10 == 0:
+                tracker.evaluate()
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        server.stop()
+    assert errors == []
+
+
+def test_trace_export_during_concurrent_appends(tmp_path):
+    tracer = Tracer()
+    stop = threading.Event()
+    errors: list[Exception] = []
+
+    def appender():
+        try:
+            while not stop.is_set():
+                with tracer.span("hot.span", k=1):
+                    pass
+        except Exception as exc:
+            errors.append(exc)
+
+    threads = [threading.Thread(target=appender) for _ in range(2)]
+    path = tmp_path / "spans.jsonl"
+    try:
+        for t in threads:
+            t.start()
+        for _ in range(20):
+            tracer.export_jsonl(path)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+    assert errors == []
+    spans = load_spans(path)
+    assert spans and all(s["name"] == "hot.span" for s in spans)
+
+
+# ----------------------------------------------- corrupted-model sanity unit
+
+
+def test_corrupted_calibration_is_visible_in_residuals():
+    """The exact signal the watchdog keys on: a corrupted correction makes
+    the model's predictions diverge from measurements by construction."""
+    honest = CalibratedCostModel()
+    corrupted = CalibratedCostModel(
+        corrections={"csr": FormatCalibration(launch_overhead_s=0.0,
+                                              latency_scale=100.0, samples=8)}
+    )
+    from repro.core.objectives import MatrixStats
+    from repro.kernels.common import DEFAULT_SCHEDULE
+
+    stats = MatrixStats(hetero_matrix(128))
+    base = honest.evaluate(stats, "csr", DEFAULT_SCHEDULE).latency
+    lie = corrupted.evaluate(stats, "csr", DEFAULT_SCHEDULE).latency
+    residual = abs(base - lie) / base
+    assert residual > 10.0  # far past any AnomalyConfig threshold
